@@ -1,0 +1,76 @@
+"""Beyond-paper ablation: bin-grid spacing under heavy tails.
+
+The paper uses linear bins. Heavy-tailed length laws suggest log-spaced bins
+(constant RELATIVE resolution), especially on chat where the cross-prompt
+median spans two orders of magnitude. Also sweeps K to show robustness of the
+ProD-D pipeline to the grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import scenario_pcfg
+from repro.core import bins as B
+from repro.core import targets as T
+from repro.core.metrics import mae
+from repro.core.predictor import train_predictor
+from repro.data import make_scenario
+
+
+def run(scenarios=(("qwen", "chat"), ("qwen", "math")), fast=True, seed=0,
+        verbose=True):
+    out = {}
+    for model, scen in scenarios:
+        data = make_scenario(model, scen, n_train=800 if fast else None,
+                             n_test=400 if fast else None, seed=seed,
+                             full_paper_splits=not fast)
+        y_test = T.sample_median(jnp.asarray(data.len_test, jnp.float32))
+        phi_tr = jnp.asarray(data.phi_train["last"])
+        phi_te = jnp.asarray(data.phi_test["last"])
+        res = {}
+        for spacing in ("linear", "log"):
+            for K in (16, 64, 128):
+                pcfg = dataclasses.replace(
+                    scenario_pcfg(data, n_bins=K, epochs=15 if fast else 30),
+                    bin_spacing=spacing)
+                edges = B.make_edges(K, pcfg.bin_max, spacing)
+                tgt = T.dist_target(jnp.asarray(data.len_train, jnp.float32),
+                                    edges)
+                p = train_predictor(jax.random.PRNGKey(seed), phi_tr, tgt,
+                                    pcfg, edges)
+                res[(spacing, K)] = mae(p.predict(phi_te), y_test)
+        out[(model, scen)] = res
+        if verbose:
+            for k, v in sorted(res.items()):
+                print(f"  [{model}/{scen}] {k[0]:6s} K={k[1]:3d}  MAE {v:7.2f}")
+    return out
+
+
+def validate(out) -> dict:
+    checks = {}
+    for (model, scen), res in out.items():
+        lin = min(v for (sp, _), v in res.items() if sp == "linear")
+        log = min(v for (sp, _), v in res.items() if sp == "log")
+        checks[f"{model}/{scen}_log_vs_linear_pct"] = round(
+            100 * (lin - log) / lin, 1)
+        # the insight: LOG grids stay robust across K even on heavy-tailed
+        # scenarios, while coarse LINEAR grids can blow up (chat, K=16)
+        logs = [v for (sp, _), v in res.items() if sp == "log"]
+        checks[f"{model}/{scen}_log_grid_robust"] = bool(
+            max(logs) < 1.25 * min(logs))
+    return checks
+
+
+def main(fast=True):
+    out = run(fast=fast)
+    print("checks:", validate(out))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: µs/call of the XLA reference path on CPU (the
+compiled-TPU path is exercised via the dry-run) + interpret-mode allclose."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=20):
+    jax.block_until_ready(fn(*args))  # compile + warm up
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose=True):
+    rows = {}
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    # flash attention (xla path)
+    B, S, H, KV, hd = 2, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="xla"))
+    rows["flash_attention_512"] = _time(f, q, k, v)
+
+    # decode attention
+    Sc = 4096
+    qd = jax.random.normal(ks[3], (8, H, hd))
+    kc = jax.random.normal(ks[4], (8, Sc, KV, hd))
+    vc = jax.random.normal(ks[5], (8, Sc, KV, hd))
+    lens = jnp.full((8,), Sc, jnp.int32)
+    fd = jax.jit(lambda q, k, v, l: ops.decode_attention(q, k, v, l, impl="xla"))
+    rows["decode_attention_4k"] = _time(fd, qd, kc, vc, lens)
+
+    # ssd scan
+    x = jax.random.normal(ks[6], (2, 512, 8, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (2, 512, 8)))
+    a = -dt * 0.5
+    Bm = jax.random.normal(ks[0], (2, 512, 32))
+    Cm = jax.random.normal(ks[1], (2, 512, 32))
+    fs = jax.jit(lambda *args: ops.ssd_scan(*args, impl="xla"))
+    rows["ssd_scan_512"] = _time(fs, x, dt, a, Bm, Cm)
+
+    # prod head (the paper's serving-path addition — should be trivial)
+    phi = jax.random.normal(ks[2], (128, 1024))
+    w1 = jax.random.normal(ks[3], (1024, 512)) * 0.05
+    w2 = jax.random.normal(ks[4], (512, 64)) * 0.05
+    edges = jnp.linspace(0, 8192.0, 65)
+    fp = jax.jit(lambda p: ops.prod_head(p, w1, jnp.zeros(512), w2,
+                                         jnp.zeros(64), edges, impl="xla"))
+    rows["prod_head_128x1024"] = _time(fp, phi)
+
+    if verbose:
+        for name, us in rows.items():
+            print(f"  {name:24s} {us:10.1f} us/call")
+    return rows
+
+
+def main():
+    return run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Table 1 — prompt-only length prediction (main result).
+
+Test MAE vs the 16-sample median target for every method across the eight
+(served model × scenario) settings, plus the Noise Radius reference line.
+Validates the paper's claims: ProD-D < ProD-M < TRAIL-last < others, and the
+ProD average advantage over the best external baseline.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import all_settings, scenario_pcfg
+from repro.core.baselines import METHODS, run_method
+from repro.core.metrics import noise_radius
+
+
+def run(fast=True, seed=0, verbose=True):
+    rows = {}
+    radii = {}
+    for model, scen, data, epochs in all_settings(fast=fast, seed=seed):
+        pcfg = scenario_pcfg(data, epochs=epochs)
+        key = jax.random.PRNGKey(seed)
+        for i, method in enumerate(METHODS):
+            res = run_method(jax.random.fold_in(key, i), data, method, pcfg,
+                             supervision="repeat", eval_target="median")
+            rows.setdefault(method, {})[(model, scen)] = res.test_mae
+        radii[(model, scen)] = noise_radius(data.len_test)
+        if verbose:
+            print(f"  [{model}/{scen}] " + "  ".join(
+                f"{m}={rows[m][(model, scen)]:.1f}" for m in METHODS))
+
+    table = {}
+    for method in METHODS:
+        for model in ("qwen", "llama"):
+            vals = [rows[method][(model, s)] for _, s in
+                    [(model, sc) for sc in ("math", "coding", "longseq", "chat")]]
+            table[(method, model, "avg")] = float(np.mean(vals))
+    checks = validate(rows, radii)
+    return {"rows": rows, "noise_radius": radii, "avg": table, "checks": checks}
+
+
+def validate(rows, radii) -> dict:
+    """The paper's qualitative claims on Table 1:
+    ProD-D strictly best on average (both backbones); ProD-M at worst ties the
+    strongest external baseline (the paper's own gap is ~5%); the informative
+    views beat Constant-Median; EGTP is allowed to underperform — the paper
+    itself reports it losing to Constant on qwen/chat ("entropy-weighted
+    selection concentrates on early tokens")."""
+    settings = list(rows["prod_d"].keys())
+    avg = lambda m: float(np.mean([rows[m][s] for s in settings]))
+    externals = ("s3", "trail_mean", "trail_last", "egtp")
+    checks = {
+        "prod_d_best_avg": avg("prod_d") <= min(
+            avg(m) for m in rows if m != "prod_d") + 1e-9,
+        "prod_m_at_worst_ties_best_external": avg("prod_m")
+        <= 1.03 * min(avg(m) for m in externals),
+        "prod_beats_trail_last_pct": 100.0 * (avg("trail_last") - avg("prod_d"))
+        / avg("trail_last"),
+        "informative_views_beat_constant": all(
+            avg(m) < avg("constant_median")
+            for m in ("trail_mean", "trail_last", "prod_m", "prod_d")),
+        "egtp_underperforms": avg("egtp") > avg("trail_last"),
+    }
+    return checks
+
+
+def main(fast=True):
+    out = run(fast=fast)
+    print("\nTable 1 averages (test MAE, lower better):")
+    for (method, model, _), v in sorted(out["avg"].items()):
+        print(f"  {method:16s} {model:6s} {v:8.2f}")
+    print("claims:", out["checks"])
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Tables 2–3 — single-sample supervision ablation.
+
+Every predictor family retrained with ONE sampled length per prompt;
+evaluated against (T2) the single-label target and (T3) the 16-sample median
+target, mean ± std over trials. ProD-D is omitted (degenerate under a single
+sample — paper §3.3). Validates: single-sample supervision degrades every
+method vs Table 1, and ProD-M stays best.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import all_settings, scenario_pcfg
+from repro.core.baselines import run_method
+
+ABLATION_METHODS = ("s3", "trail_mean", "trail_last", "egtp", "prod_m")
+
+
+def run(fast=True, seed=0, n_trials=3, verbose=True):
+    out = {"single": {}, "median": {}}
+    for model, scen, data, epochs in all_settings(fast=fast, seed=seed):
+        pcfg = scenario_pcfg(data, epochs=epochs)
+        for method in ABLATION_METHODS:
+            for ev in ("single", "median"):
+                maes = []
+                for t in range(n_trials):
+                    import zlib
+                    key = jax.random.PRNGKey(1000 * t + zlib.crc32(method.encode()) % 997)
+                    res = run_method(key, data, method, pcfg,
+                                     supervision="single", single_idx=t,
+                                     eval_target=ev)
+                    maes.append(res.test_mae)
+                out[ev].setdefault(method, {})[(model, scen)] = (
+                    float(np.mean(maes)), float(np.std(maes)))
+        if verbose:
+            m, s = out["median"]["prod_m"][(model, scen)]
+            print(f"  [{model}/{scen}] prod_m(single-sup, median-eval) = {m:.1f}±{s:.1f}")
+    return out
+
+
+def validate(t23, t1_rows) -> dict:
+    settings = list(t23["median"]["prod_m"].keys())
+    avg23 = lambda m: float(np.mean([t23["median"][m][s][0] for s in settings]))
+    # per-setting RELATIVE degradation (a flat average is dominated by chat,
+    # where both regimes are feature-noise-bound and supervision noise is
+    # immaterial — consistent with the paper's pattern of smaller relative
+    # gaps on chat)
+    rel = [
+        (t23["median"]["prod_m"][s][0] - t1_rows["prod_m"][s])
+        / max(t1_rows["prod_m"][s], 1e-9) for s in settings
+    ]
+    avg_single_eval = float(np.mean(
+        [t23["single"]["prod_m"][s][0] for s in settings]))
+    avg_median_eval = avg23("prod_m")
+    return {
+        "prod_m_best_in_ablation": avg23("prod_m") <= min(
+            avg23(m) for m in ABLATION_METHODS),
+        # paper's T2 > T3 pattern: the one-shot test target injects its own
+        # noise on top of the predictor error
+        "single_eval_noisier_than_median_eval":
+            avg_single_eval > avg_median_eval,
+        "mean_relative_degradation_pct": float(100 * np.mean(rel)),
+        "max_relative_degradation_pct": float(100 * np.max(rel)),
+    }
+
+
+def main(fast=True):
+    out = run(fast=fast)
+    print("\nTable 2/3 averages (single-sample supervision):")
+    for ev in ("single", "median"):
+        for method in ABLATION_METHODS:
+            vals = [v[0] for v in out[ev][method].values()]
+            print(f"  eval={ev:7s} {method:12s} {np.mean(vals):8.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Shared benchmark helpers: scenario construction, method runs, CSV rows."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.common.config import PredictorConfig
+from repro.core.baselines import run_method
+from repro.core import metrics as M
+from repro.data import make_scenario
+from repro.data.scenarios import MODELS, SCENARIOS
+
+# CPU-friendly defaults; --full switches to the paper's split sizes
+FAST = dict(n_train=700, n_test=350, epochs=15)
+FULL = dict(n_train=None, n_test=None, epochs=30, full_paper_splits=True)
+
+
+def scenario_pcfg(data, n_bins=64, epochs=15) -> PredictorConfig:
+    bin_max = float(np.quantile(data.len_train, 0.999) * 1.3)
+    return PredictorConfig(n_bins=n_bins, bin_max=bin_max, epochs=epochs)
+
+
+def all_settings(fast=True, seed=0):
+    prof = FAST if fast else FULL
+    for model in MODELS:
+        for scen in SCENARIOS:
+            data = make_scenario(
+                model, scen, seed=seed,
+                n_train=prof.get("n_train"), n_test=prof.get("n_test"),
+                full_paper_splits=prof.get("full_paper_splits", False),
+            )
+            yield model, scen, data, prof["epochs"]
+
+
+def csv_row(name: str, value, derived: str = "") -> str:
+    return f"{name},{value},{derived}"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,10 @@
+"""Common utilities: configuration, sharding rules, pytree helpers."""
+
+from repro.common.config import (  # noqa: F401
+    ModelConfig,
+    TrainConfig,
+    ServeConfig,
+    PredictorConfig,
+    InputShape,
+    INPUT_SHAPES,
+)

@@ -1,0 +1,50 @@
+"""Pytree helpers: counting, casting, shape-tree construction."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def tree_shapes(tree: Any) -> Any:
+    """Replace every leaf with a ShapeDtypeStruct (for .lower() without allocation)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def tree_zeros_like_spec(tree: Any) -> Any:
+    """Materialize zeros from a ShapeDtypeStruct tree (tests only)."""
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+
+def check_finite(tree: Any) -> bool:
+    leaves = [
+        jnp.all(jnp.isfinite(x))
+        for x in jax.tree_util.tree_leaves(tree)
+        if jnp.issubdtype(x.dtype, jnp.floating)
+    ]
+    if not leaves:
+        return True
+    return bool(jnp.all(jnp.stack(leaves)))

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: ProD — robust length prediction from
+heavy-tailed prompt-conditioned length distributions.
+
+* ``bins``      — length-bin grids, b(L) mapping, distribution decoders
+* ``targets``   — repeated-sampling supervision targets (ProD-M / ProD-D / single)
+* ``heads``     — the shared 2-layer MLP predictor head (paper 2.4)
+* ``losses``    — CE / soft-CE
+* ``predictor`` — training + single-shot inference wrapper
+* ``baselines`` — Constant-Median, S3, TRAIL-mean/last, EGTP probes
+* ``theory``    — ridge surrogate, Theorem 1 bound, Lemma 3 moment check
+* ``metrics``   — MAE, noise radius (Median-MAE), heavy-tail diagnostics
+"""

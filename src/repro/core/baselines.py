@@ -1,0 +1,135 @@
+"""Baseline probes (paper §3.1) and the unified method runner.
+
+Every trainable method is (feature view, training target, decode rule) over
+the SAME 2-layer MLP head — the paper's controlled comparison:
+
+| method          | φ view                  | target (Table 1) | decode  |
+|-----------------|-------------------------|------------------|---------|
+| Constant Median | —                       | train median     | const   |
+| S³              | auxiliary proxy         | median one-hot   | argmax  | (+ num_bins/bin_max sweep, App. A.2)
+| TRAIL-mean      | mean-pooled hidden      | median one-hot   | mean    |
+| TRAIL-last      | last-token hidden       | median one-hot   | mean    |
+| EGTP            | entropy-weighted pooled | median one-hot   | mean    | (+ num_bins sweep)
+| ProD-M          | last-token hidden       | median one-hot   | median  |
+| ProD-D          | last-token hidden       | histogram        | median  |
+
+Supervision regimes: ``repeat`` (Table 1) trains on the 16-sample targets;
+``single`` (Tables 2–3) trains every method on one sampled length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import PredictorConfig
+from repro.core import bins as bins_mod
+from repro.core import targets as targets_mod
+from repro.core.metrics import mae
+from repro.core.predictor import LengthPredictor, train_predictor
+
+METHODS = (
+    "constant_median", "s3", "trail_mean", "trail_last", "egtp",
+    "prod_m", "prod_d",
+)
+
+_VIEW = {
+    "s3": "proxy", "trail_mean": "mean", "trail_last": "last",
+    "egtp": "entropy", "prod_m": "last", "prod_d": "last",
+}
+_DECODE = {
+    "s3": "argmax", "trail_mean": "mean", "trail_last": "mean",
+    "egtp": "mean", "prod_m": "median", "prod_d": "median",
+}
+_TARGET = {
+    "s3": "median", "trail_mean": "median", "trail_last": "median",
+    "egtp": "median", "prod_m": "median", "prod_d": "dist",
+}
+
+S3_NUM_BINS_GRID = (7, 10, 13, 15, 20)
+
+
+@dataclass
+class MethodResult:
+    method: str
+    test_mae: float
+    pred: np.ndarray
+    predictor: Optional[LengthPredictor] = None
+    selected: Optional[dict] = None
+
+
+def _bin_max_grid(train_lengths: np.ndarray) -> Sequence[float]:
+    """Scene-adaptive bin_max grid in the spirit of App. A.2 (p95–p99.9×1.3)."""
+    hi = float(np.quantile(train_lengths, 0.999)) * 1.3
+    lo = float(np.quantile(train_lengths, 0.95))
+    return tuple(np.linspace(lo, hi, 4))
+
+
+def run_method(
+    key: jax.Array,
+    data,                       # repro.data ScenarioData
+    method: str,
+    pcfg: PredictorConfig,
+    supervision: str = "repeat",     # repeat | single
+    single_idx: int = 0,
+    eval_target: str = "median",     # median | single
+) -> MethodResult:
+    len_train = jnp.asarray(data.len_train, jnp.float32)   # (N, r)
+    len_test = jnp.asarray(data.len_test, jnp.float32)     # (Nt, r)
+    if eval_target == "median":
+        y_test = targets_mod.sample_median(len_test)
+    else:
+        y_test = len_test[:, single_idx]
+
+    if method == "constant_median":
+        const = float(jnp.median(targets_mod.sample_median(len_train)))
+        pred = np.full(len_test.shape[0], const, np.float32)
+        return MethodResult(method, mae(jnp.asarray(pred), y_test), pred,
+                            selected={"constant": const})
+
+    view = _VIEW[method]
+    phi_tr = jnp.asarray(data.phi_train[view], jnp.float32)
+    phi_te = jnp.asarray(data.phi_test[view], jnp.float32)
+
+    target_kind = _TARGET[method] if supervision == "repeat" else "single"
+    if method == "prod_d" and supervision == "single":
+        raise ValueError("ProD-D is undefined under single-sample supervision "
+                         "(degenerate distribution target) — paper §3.3")
+    decode_rule = _DECODE[method]
+
+    def fit_eval(n_bins: int, bin_max: float, k):
+        edges = bins_mod.make_edges(n_bins, bin_max, pcfg.bin_spacing)
+        tgt = targets_mod.build_target(len_train, edges, target_kind, single_idx)
+        p = train_predictor(k, phi_tr, tgt,
+                            dataclasses.replace(pcfg, n_bins=n_bins,
+                                                bin_max=bin_max),
+                            edges=edges)
+        pred_tr = p.predict(phi_tr, decode_rule)
+        y_tr = (targets_mod.sample_median(len_train)
+                if supervision == "repeat" else len_train[:, single_idx])
+        return p, mae(pred_tr, y_tr)
+
+    selected = {}
+    if method in ("s3", "egtp"):
+        # hyper-parameter sweep on the train split (App. A.2 protocol)
+        best = None
+        grids = [(nb, bm) for nb in S3_NUM_BINS_GRID
+                 for bm in (_bin_max_grid(np.asarray(len_train))
+                            if method == "s3" else (pcfg.bin_max,))]
+        keys = jax.random.split(key, len(grids))
+        for (nb, bm), k in zip(grids, keys):
+            p, train_mae = fit_eval(nb, float(bm), k)
+            if best is None or train_mae < best[0]:
+                best = (train_mae, p, {"num_bins": nb, "bin_max": float(bm)})
+        _, predictor, selected = best
+    else:
+        predictor, _ = fit_eval(pcfg.n_bins, pcfg.bin_max, key)
+
+    pred = predictor.predict(phi_te, decode_rule)
+    return MethodResult(method, mae(pred, y_test), np.asarray(pred), predictor,
+                        selected)

@@ -1,0 +1,53 @@
+"""The shared ProD predictor head (paper §2.4).
+
+A 2-layer MLP: φ(x) ∈ R^d → 512 (ReLU) → K bin logits → softmax. Both ProD-M
+and ProD-D use this exact head; the *only* difference is the training target.
+The fused Pallas version lives in ``repro.kernels.prod_head``; this module is
+the trainable jnp twin (identical math — asserted by the kernel tests).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bins import decode as decode_probs
+from repro.kernels import ops
+
+
+def head_init(key: jax.Array, d: int, hidden: int, n_bins: int) -> Dict[str, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d, hidden)) * (1.0 / jnp.sqrt(d)),
+        "b1": jnp.zeros(hidden),
+        "w2": jax.random.normal(k2, (hidden, n_bins)) * (1.0 / jnp.sqrt(hidden)),
+        "b2": jnp.zeros(n_bins),
+    }
+
+
+def head_logits(params: Dict[str, jax.Array], phi: jax.Array) -> jax.Array:
+    h = jax.nn.relu(phi.astype(jnp.float32) @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def head_probs(params: Dict[str, jax.Array], phi: jax.Array) -> jax.Array:
+    return jax.nn.softmax(head_logits(params, phi), axis=-1)
+
+
+def head_predict(
+    params: Dict[str, jax.Array],
+    phi: jax.Array,
+    edges: jax.Array,
+    how: str = "median",
+    impl: str = "auto",
+) -> jax.Array:
+    """Single-shot point prediction. ``median`` uses the fused kernel path."""
+    if how == "median":
+        _, med = ops.prod_head(
+            phi, params["w1"], params["b1"], params["w2"], params["b2"], edges,
+            impl=impl,
+        )
+        return med
+    return decode_probs(head_probs(params, phi), edges, how)

@@ -1,0 +1,16 @@
+"""Cross-entropy losses over the K-bin grid (paper §2.4).
+
+``soft_ce`` covers both variants: with a one-hot target it is ProD-M's
+standard CE; with a histogram target it is ProD-D's distributional soft CE.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def soft_ce(logits: jax.Array, target: jax.Array) -> jax.Array:
+    """-(1/N) Σ_i Σ_k target_i(k) log q(k|x_i)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(target * logp, axis=-1))

@@ -1,0 +1,90 @@
+"""ProD-O: online remaining-length prediction (beyond paper; its §5 roadmap).
+
+The paper's formulation (§2.2) already covers t > 0: after t output tokens the
+state z_t = {x, y_1..y_t} induces a distribution P(L_t | φ(z_t)) over the
+REMAINING length. Repeated sampling per state is not available online (each
+trajectory visits its states once), so supervision is single-draw — but the
+predictor still outputs a K-bin distribution trained by CE and decoded by the
+median (ProD's robust decode), TRAIL-style with ProD machinery.
+
+This module builds the (φ(z_t), L − t) dataset from RealEngine generations,
+trains the same head, and evaluates remaining-length MAE as a function of t —
+the expected signature is error shrinking as decoding progresses, beating the
+static prompt-only baseline max(median − t, 0).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import PredictorConfig
+from repro.core import bins as bins_mod
+from repro.core.metrics import mae
+from repro.core.predictor import LengthPredictor, train_predictor
+from repro.core.targets import build_target
+
+
+def build_online_dataset(
+    step_hidden: np.ndarray,   # (B, T, d) per-step decode hidden states
+    step_valid: np.ndarray,    # (B, T) bool
+    lengths: np.ndarray,       # (B,) realized generation lengths
+    stride: int = 1,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Flatten trajectories into (phi (N,d), remaining (N,), t (N,), b (N,))."""
+    B, T, d = step_hidden.shape
+    phis, rem, ts, bs = [], [], [], []
+    for b in range(B):
+        L = int(lengths[b])
+        for t in range(0, min(L, T), stride):
+            if not step_valid[b, t]:
+                continue
+            phis.append(step_hidden[b, t])
+            rem.append(L - (t + 1))
+            ts.append(t + 1)
+            bs.append(b)
+    return (np.stack(phis).astype(np.float32),
+            np.asarray(rem, np.float32), np.asarray(ts, np.int64),
+            np.asarray(bs, np.int64))
+
+
+def train_online_predictor(
+    key: jax.Array,
+    phi: np.ndarray,
+    remaining: np.ndarray,
+    pcfg: PredictorConfig,
+) -> LengthPredictor:
+    edges = bins_mod.make_edges(pcfg.n_bins, pcfg.bin_max, pcfg.bin_spacing)
+    target = build_target(jnp.asarray(remaining)[:, None], edges, "single")
+    return train_predictor(key, jnp.asarray(phi), target, pcfg, edges)
+
+
+def evaluate_by_progress(
+    predictor: LengthPredictor,
+    phi: np.ndarray,
+    remaining: np.ndarray,
+    ts: np.ndarray,
+    static_total_pred: Optional[np.ndarray] = None,   # per-sample prompt-only L̂
+    n_buckets: int = 4,
+) -> Dict[str, Dict[int, float]]:
+    """Remaining-length MAE bucketed by decode progress t; compares the online
+    head against the static baseline max(L̂_prompt − t, 0)."""
+    pred = np.asarray(predictor.predict(jnp.asarray(phi)))
+    out: Dict[str, Dict[int, float]] = {"online": {}, "static": {}, "count": {}}
+    edges = np.quantile(ts, np.linspace(0, 1, n_buckets + 1))
+    for i in range(n_buckets):
+        m = (ts >= edges[i]) & (ts <= edges[i + 1] if i == n_buckets - 1
+                                else ts < edges[i + 1])
+        if not m.any():
+            continue
+        lo = int(edges[i])
+        out["online"][lo] = float(np.mean(np.abs(pred[m] - remaining[m])))
+        out["count"][lo] = int(m.sum())
+        if static_total_pred is not None:
+            stat = np.maximum(static_total_pred[m] - ts[m], 0.0)
+            out["static"][lo] = float(np.mean(np.abs(stat - remaining[m])))
+    return out

@@ -1,0 +1,91 @@
+"""LengthPredictor: train the shared head on repeated-sampling targets and
+serve single-shot point predictions (paper §2.4).
+
+``train_predictor`` is the one function every method variant goes through —
+ProD-M / ProD-D / single-sample baselines differ ONLY in the target matrix
+and decode rule, which is exactly the paper's controlled comparison.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import PredictorConfig
+from repro.core import bins as bins_mod
+from repro.core.heads import head_init, head_logits, head_predict, head_probs
+from repro.core.losses import soft_ce
+from repro.training.optim import adamw, Optimizer
+from repro.common.config import TrainConfig
+
+
+@dataclass
+class LengthPredictor:
+    params: Dict[str, jax.Array]
+    edges: jax.Array
+    pcfg: PredictorConfig
+
+    def predict(self, phi: jax.Array, how: Optional[str] = None) -> jax.Array:
+        return head_predict(self.params, phi, self.edges, how or self.pcfg.decode)
+
+    def predict_dist(self, phi: jax.Array) -> jax.Array:
+        return head_probs(self.params, phi)
+
+    def quantile(self, phi: jax.Array, q: float) -> jax.Array:
+        """Predictive-distribution quantile (used for KV reservation)."""
+        probs = self.predict_dist(phi)
+        cdf = jnp.cumsum(probs, axis=-1)
+        k = jnp.argmax(cdf >= q, axis=-1)
+        return self.edges[k + 1]
+
+
+def train_predictor(
+    key: jax.Array,
+    phi: jax.Array,            # (N, d) features
+    target: jax.Array,         # (N, K) one-hot or histogram
+    pcfg: PredictorConfig,
+    edges: Optional[jax.Array] = None,
+    verbose: bool = False,
+) -> LengthPredictor:
+    N, d = phi.shape
+    K = target.shape[1]
+    if edges is None:
+        edges = bins_mod.make_edges(pcfg.n_bins, pcfg.bin_max, pcfg.bin_spacing)
+    params = head_init(key, d, pcfg.hidden, K)
+    opt = adamw(TrainConfig(optimizer="adamw", lr=pcfg.lr, schedule="constant",
+                            warmup_steps=1, weight_decay=pcfg.weight_decay,
+                            beta1=0.9, beta2=0.999))
+    state = opt.init(params)
+    bs = min(pcfg.batch_size, N)
+    steps_per_epoch = max(N // bs, 1)
+    # small datasets need a step floor, not an epoch count (the head sees too
+    # few updates otherwise) — keep at least ~400 optimizer steps
+    min_epochs = -(-400 // steps_per_epoch)
+    n_epochs = max(pcfg.epochs, min_epochs)
+
+    @jax.jit
+    def step(params, state, x, y, i):
+        loss, grads = jax.value_and_grad(
+            lambda p: soft_ce(head_logits(p, x), y)
+        )(params)
+        params, state = opt.update(grads, state, params, i)
+        return params, state, loss
+
+    phi = jnp.asarray(phi, jnp.float32)
+    target = jnp.asarray(target, jnp.float32)
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    it = 0
+    for epoch in range(n_epochs):
+        perm = rng.permutation(N)
+        for s in range(steps_per_epoch):
+            idx = perm[s * bs : (s + 1) * bs]
+            params, state, loss = step(params, state, phi[idx], target[idx],
+                                       jnp.asarray(it, jnp.float32))
+            it += 1
+        if verbose and (epoch % 10 == 0 or epoch == n_epochs - 1):
+            print(f"  epoch {epoch:3d}  soft-CE {float(loss):.4f}")
+    return LengthPredictor(params=params, edges=edges, pcfg=pcfg)

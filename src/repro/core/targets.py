@@ -1,0 +1,56 @@
+"""Repeated-sampling supervision targets (paper §2.3–2.4).
+
+Given r independent generations per prompt with lengths ``L (N, r)``:
+
+* **ProD-M**: one-hot of the binned sample median — compresses the heavy tail
+  into a robust point target aligned with the MAE-Bayes-optimal conditional
+  median.
+* **ProD-D**: the binned empirical histogram — preserves the full
+  prompt-conditioned uncertainty as a soft target.
+* **single**: one-hot of a single sampled length — the (statistically
+  misaligned) supervision all prior methods use; kept for the ablations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bins import bin_index
+
+
+def sample_median(lengths: jax.Array) -> jax.Array:
+    """Sample median over the repeat axis. lengths: (N, r) -> (N,)."""
+    return jnp.median(lengths.astype(jnp.float32), axis=-1)
+
+
+def median_target(lengths: jax.Array, edges: jax.Array) -> jax.Array:
+    """ProD-M: y_med one-hot (N, K)."""
+    K = edges.shape[0] - 1
+    med = sample_median(lengths)
+    return jax.nn.one_hot(bin_index(med, edges), K, dtype=jnp.float32)
+
+
+def dist_target(lengths: jax.Array, edges: jax.Array) -> jax.Array:
+    """ProD-D: p_dist (N, K); p_i(k) = (1/r) Σ_j 1[b(L_ij)=k]."""
+    K = edges.shape[0] - 1
+    idx = bin_index(lengths, edges)                       # (N, r)
+    return jnp.mean(jax.nn.one_hot(idx, K, dtype=jnp.float32), axis=1)
+
+
+def single_target(lengths: jax.Array, edges: jax.Array, which: int = 0) -> jax.Array:
+    """One-shot label (ablation): one-hot of the ``which``-th sample."""
+    K = edges.shape[0] - 1
+    one = lengths[:, which].astype(jnp.float32)
+    return jax.nn.one_hot(bin_index(one, edges), K, dtype=jnp.float32)
+
+
+def build_target(lengths: jax.Array, edges: jax.Array, kind: str,
+                 single_idx: int = 0) -> jax.Array:
+    if kind == "median":
+        return median_target(lengths, edges)
+    if kind == "dist":
+        return dist_target(lengths, edges)
+    if kind == "single":
+        return single_target(lengths, edges, single_idx)
+    raise ValueError(kind)

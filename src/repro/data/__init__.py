@@ -1,0 +1,5 @@
+"""Data substrate: heavy-tailed prompt-conditioned length laws, calibrated
+scenario generators (Track A), the theory-surrogate generator, a toy
+tokenizer/corpus, and the sharded LM training pipeline."""
+
+from repro.data.synthetic import ScenarioData, make_scenario  # noqa: F401

@@ -1,0 +1,69 @@
+"""Heavy-tailed prompt-conditioned output-length laws.
+
+Each prompt i carries latent (m_i, σ_i, w_i, α_i): conditional on the prompt,
+
+    L  ~  m_i · LogNormal(0, σ_i)                 w.p. 1 − w_i   (body)
+    L  ~  m_i · (1 + Pareto(α_i))                 w.p. w_i       (tail)
+
+The lognormal body has median m_i (so the prompt median is stable), while the
+Pareto tail produces the occasional multi-× generations the paper documents
+(max/median 2–4× over 100 repeats). This is the data-generating family the
+paper's Observations 1–2 are consistent with; Assumption 1's (1+ε)-moment
+bound holds for α > 1 + ε.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LengthLaw:
+    """Scenario-level hyper-parameters for the per-prompt latents."""
+
+    median_scale: float        # cross-prompt median of m_i
+    median_spread: float       # lognormal σ of m_i across prompts
+    sigma_body: float          # within-prompt lognormal σ (noise radius driver)
+    tail_weight: float         # P(tail draw)
+    tail_alpha: float          # Pareto index (smaller = heavier)
+    min_len: int = 4
+    max_len: int = 1 << 17
+
+
+def sample_prompt_latents(
+    rng: np.random.Generator, law: LengthLaw, n: int
+) -> np.ndarray:
+    """Per-prompt latent matrix z (n, 4): [log m, σ, w, α]."""
+    log_m = np.log(law.median_scale) + law.median_spread * rng.standard_normal(n)
+    sigma = law.sigma_body * np.exp(0.25 * rng.standard_normal(n))
+    w = np.clip(law.tail_weight * np.exp(0.5 * rng.standard_normal(n)), 0.0, 0.4)
+    alpha = np.clip(law.tail_alpha * np.exp(0.15 * rng.standard_normal(n)), 1.1, 8.0)
+    return np.stack([log_m, sigma, w, alpha], axis=1)
+
+
+def sample_lengths(
+    rng: np.random.Generator, latents: np.ndarray, r: int, law: LengthLaw
+) -> np.ndarray:
+    """r independent generations per prompt. latents (n,4) -> lengths (n, r)."""
+    n = latents.shape[0]
+    m = np.exp(latents[:, 0])[:, None]
+    sigma = latents[:, 1][:, None]
+    w = latents[:, 2][:, None]
+    alpha = latents[:, 3][:, None]
+    body = m * np.exp(sigma * rng.standard_normal((n, r)))
+    # Pareto tail via inverse CDF: L = m · u^{-1/α} ≥ m
+    u = rng.random((n, r))
+    tail = m * (u ** (-1.0 / alpha))
+    pick_tail = rng.random((n, r)) < w
+    L = np.where(pick_tail, tail, body)
+    return np.clip(np.rint(L), law.min_len, law.max_len).astype(np.int64)
+
+
+def true_conditional_median(latents: np.ndarray) -> np.ndarray:
+    """Population median of the mixture ≈ body median m (tail weight ≤ 0.4
+    keeps the mixture median inside the body; exact for w < 0.5 up to the
+    body/tail overlap, adequate as the θ*-target for the theory checks)."""
+    return np.exp(latents[:, 0])

@@ -1,0 +1,109 @@
+"""Pallas TPU flash-decode: one query token vs. a long KV cache.
+
+Grid ``(B, KV, n_kv_blocks)`` — each program attends the G query heads of one
+GQA group to one KV block, accumulating the online softmax in VMEM scratch.
+This is the serving-decode hot spot: arithmetic intensity ~1 (memory bound),
+so the kernel's job is to stream K/V through VMEM exactly once.
+
+Cache-validity lengths arrive via scalar prefetch (SMEM) so the mask is
+computed from iota without materializing a (B, S) bool array.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,                  # SMEM (B,) int32 — scalar-prefetched lengths
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, block_kv: int,
+):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)         # (G, hd)
+    k = k_ref[0].astype(jnp.float32)            # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                    # (G, bkv)
+    kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _fini():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,            # (B, H, hd)
+    k: jax.Array,            # (B, Sc, KV, hd)
+    v: jax.Array,            # (B, Sc, KV, hd)
+    lengths: jax.Array,      # (B,) int32
+    *,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, hd = q.shape
+    _, Sc, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    block_kv = min(block_kv, Sc)
+    pad = (-Sc) % block_kv
+    kh = jnp.moveaxis(k, 2, 1)                   # (B, KV, Sc, hd)
+    vh = jnp.moveaxis(v, 2, 1)
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nkv = (Sc + pad) // block_kv
+    qg = q.reshape(B, KV, G, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, h, ki, lens: (b * KV + h, ki, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, h, ki, lens: (b * KV + h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_kv=block_kv),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg,
+      kh.reshape(B * KV, Sc + pad, hd), vh.reshape(B * KV, Sc + pad, hd))
+    return out.reshape(B, H, hd)

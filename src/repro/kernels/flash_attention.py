@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (prefill/train hot spot).
+
+Grid ``(B*H, n_q_blocks, n_kv_blocks)`` — KV fastest, so the VMEM scratch
+(m, l, acc) accumulates the online softmax across KV blocks for one Q tile.
+GQA is handled in the K/V index maps (query head h reads kv head h // G).
+BlockSpec tiles are MXU-aligned on (block_q, head_dim); masking (causal /
+sliding-window / KV-length) is computed from iota inside the kernel, so no
+(S, S) mask ever exists.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: int, kv_len: int,
+    block_q: int, block_kv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)            # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)            # (bkv, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                   # (bq, bkv)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    mask = kpos < kv_len
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                         # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _fini():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,            # (B, Sq, H, hd)
+    k: jax.Array,            # (B, Skv, KV, hd)
+    v: jax.Array,            # (B, Skv, KV, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    pad_q = (-Sq) % block_q
+    pad_kv = (-Skv) % block_kv
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * KV, Skv, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, Skv, hd)
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        kh = jnp.pad(kh, ((0, 0), (0, pad_kv), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad_kv), (0, 0)))
+    nq = (Sq + pad_q) // block_q
+    nkv = (Skv + pad_kv) // block_kv
+
+    def kv_index(bh, qi, ki):
+        b, h = bh // H, bh % H
+        return (b * KV + h // G, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            kv_len=Skv, block_q=block_q, block_kv=block_kv,
+        ),
+        grid=(B * H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, hd), kv_index),
+            pl.BlockSpec((1, block_kv, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq + pad_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    out = out[:, :Sq].reshape(B, H, Sq, hd)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,99 @@
+"""Pallas TPU chunked SSD scan (Mamba2's compute hot spot).
+
+Grid ``(B, n_chunks)`` — chunks iterate fastest, carrying the (H, P, N)
+inter-chunk state in VMEM scratch. Within a chunk everything is dense
+matmul work (C·Bᵀ scores, decay-weighted combine, state outer-products) —
+exactly the MXU-friendly reformulation that state-space duality buys.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
+    *, chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q, H)
+    a = a_ref[0].astype(jnp.float32)        # (Q, H)
+    Bm = b_ref[0].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)       # (Q, N)
+    h = h_ref[...]                          # (H, P, N)
+
+    cum = jnp.cumsum(a, axis=0)             # (Q, H)
+    L = jnp.exp(cum[:, None, :] - cum[None, :, :])            # (Q, Q, H)
+    Q = chunk
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri[:, :, None], L, 0.0)
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                       # (Q, Q)
+    scores = CB[:, :, None] * L * dt[None, :, :]              # (Q, Q, H)
+    y_intra = jnp.einsum("qkh,khp->qhp", scores, x)
+    y_inter = jnp.einsum("qn,qh,hpn->qhp", Cm, jnp.exp(cum), h)
+
+    cum_last = cum[-1:, :]                                    # (1, H)
+    decay_to_end = jnp.exp(cum_last - cum) * dt               # (Q, H)
+    state_new = jnp.einsum("kn,kh,khp->hpn", Bm, decay_to_end, x)
+    h_ref[...] = jnp.exp(cum_last[0])[:, None, None] * h + state_new
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _fini():
+        hout_ref[0] = h_ref[...]
+
+
+def ssd_scan_pallas(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H)
+    a: jax.Array,    # (B, S, H) log-decay
+    Bm: jax.Array,   # (B, S, N)
+    Cm: jax.Array,   # (B, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,H,P), h_final (B,H,P,N) fp32). S must be chunk-padded
+    by the wrapper (ops.ssd_scan handles padding)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    y, h = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, Bm, Cm)
+    return y, h

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, workload input specs, multi-pod dry-run,
+and the train/serve entry points."""

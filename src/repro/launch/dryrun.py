@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+
+For every (architecture × input shape × mesh) combination this lowers and
+compiles the real step function — train_step for train shapes, prefill/serve
+steps (with the fused ProD length-prediction head) for inference shapes —
+against ShapeDtypeStruct stand-ins (no allocation), then records:
+
+* ``memory_analysis()``  — proves the per-chip working set,
+* ``cost_analysis()``    — per-device HLO FLOPs / bytes,
+* a collective-traffic estimate parsed from the partitioned HLO text
+  (all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute),
+
+and derives the three v5e roofline terms (EXPERIMENTS.md §Roofline).
+
+NOTE: the XLA_FLAGS line above must execute before ANY other jax import —
+keep it the first statement of this file. Do not set that env var globally.
+"""
+
+import argparse
+import gc
+import json
+import re
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.common.config import INPUT_SHAPES, get_input_shape
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.mesh import (
+    HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh, n_chips,
+)
+from repro.launch import hlo_analysis
+from repro.launch.workload import build_steps, cfg_for_shape
+
+_DT_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    b = _DT_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+_OPCODE_RE = re.compile(r"=\s*(?:\([^)]*\)|[\w\[\],{}]+)\s+([\w\-]+)\(")
+_WHILE_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_DEF_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+
+def _instruction_traffic(rhs: str, opcode: str) -> float:
+    head = rhs.split(opcode, 1)[0]
+    result_bytes = sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(head))
+    operands = rhs.split("(", 1)[1] if "(" in rhs else ""
+    operand_bytes = [_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(operands)]
+    if opcode == "all-reduce":
+        return 2.0 * result_bytes
+    if opcode == "reduce-scatter":
+        return float(max(operand_bytes or [result_bytes]))
+    return float(result_bytes)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic from the partitioned HLO, with while-loop
+    bodies weighted by their ``known_trip_count`` (a layer scan executes its
+    collectives L times but they appear once in the text).
+
+    Traffic model (ring algorithms, per-chip): all-reduce ≈ 2x result bytes;
+    all-gather ≈ result bytes; reduce-scatter ≈ max operand bytes;
+    all-to-all / collective-permute ≈ result bytes.
+    """
+    # ---- split into computations ------------------------------------------
+    comps: Dict[str, list] = {}
+    current = None
+    entry = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):
+            m = _COMP_DEF_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                current = m.group(2).lstrip("%")
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+                continue
+        if line.strip() == "}":
+            continue
+        if current is not None:
+            comps[current].append(line.strip())
+
+    # ---- per-computation own traffic + callee edges ------------------------
+    own = {c: {op: 0.0 for op in _COLL_OPS} for c in comps}
+    counts = {c: {op: 0 for op in _COLL_OPS} for c in comps}
+    calls: Dict[str, list] = {c: [] for c in comps}  # (callee, multiplier)
+    for cname, lines in comps.items():
+        for ls in lines:
+            if "=" not in ls:
+                continue
+            mo = _OPCODE_RE.search(ls)
+            if mo is None:
+                continue
+            opcode = mo.group(1)
+            base = opcode.replace("-start", "").replace("-done", "")
+            if base in _COLL_OPS and not opcode.endswith("-done"):
+                rhs = ls.split("=", 1)[1]
+                own[cname][base] += _instruction_traffic(rhs, base)
+                counts[cname][base] += 1
+            elif opcode == "while":
+                bm = _WHILE_BODY_RE.search(ls)
+                tm = _TRIP_RE.search(ls)
+                trips = int(tm.group(1)) if tm else 1
+                if bm:
+                    calls[cname].append((bm.group(1).lstrip("%"), trips))
+            else:
+                for callee in re.findall(
+                        r"(?:calls|to_apply|body|branch_computations)=\{?(%[\w.\-]+)", ls):
+                    calls[cname].append((callee.lstrip("%"), 1))
+
+    # ---- effective traffic from ENTRY (memoized DAG walk) ------------------
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def eff(c: str, depth=0) -> Dict[str, float]:
+        if c in memo:
+            return memo[c]
+        if depth > 16 or c not in comps:
+            return {op: 0.0 for op in _COLL_OPS}
+        tot = dict(own[c])
+        for callee, mult in calls[c]:
+            sub = eff(callee, depth + 1)
+            for op in _COLL_OPS:
+                tot[op] += mult * sub[op]
+        memo[c] = tot
+        return tot
+
+    root = entry or (max(comps, key=lambda c: len(comps[c])) if comps else None)
+    totals = eff(root) if root else {op: 0.0 for op in _COLL_OPS}
+    static_counts = {op: sum(counts[c][op] for c in comps) for op in _COLL_OPS}
+    return {**{f"{k}_bytes": v for k, v in totals.items()},
+            **{f"{k}_count": static_counts[k] for k in static_counts},
+            "total_bytes": sum(totals.values())}
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D (train) or 2·N_active·D (inference);
+    D = global tokens processed by the step."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/request
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            variant: str = "baseline") -> dict:
+    shape = get_input_shape(shape_name)
+    base_cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = n_chips(mesh)
+    t0 = time.time()
+    result = dict(arch=arch, shape=shape_name, mesh="multipod" if multi_pod
+                  else "pod", chips=chips, variant=variant, ok=False)
+    try:
+        built = build_steps(base_cfg, shape, mesh=mesh, variant=variant)
+        cfg = built["cfg"]
+        with mesh:
+            jitted = jax.jit(
+                built["step"],
+                in_shardings=built["arg_shardings"],
+                out_shardings=built["out_shardings"],
+            )
+            lowered = jitted.lower(*built["arg_specs"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            ma = compiled.memory_analysis()
+            mem = {
+                "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+                "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0) or 0),
+            }
+        except Exception as e:  # CPU backend may not implement it
+            mem = {"error": str(e)}
+        hlo = compiled.as_text()
+        stats = hlo_analysis.analyze(hlo)
+        coll = stats.as_dict()
+        flops_dev = stats.flops               # trip-count-weighted, per device
+        bytes_dev = stats.hbm_bytes
+
+        mf = model_flops(cfg, shape)
+        flops_global = flops_dev * chips
+        compute_term = flops_dev / PEAK_FLOPS_BF16
+        memory_term = bytes_dev / HBM_BW
+        collective_term = stats.total_coll_bytes / ICI_BW
+        terms = {"compute_s": compute_term, "memory_s": memory_term,
+                 "collective_s": collective_term}
+        dominant = max(terms, key=terms.get)
+
+        arg_bytes = mem.get("argument_bytes", 0)
+        result.update(
+            ok=True,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+            xla_cost_flops=float(cost.get("flops", 0.0)),
+            xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+            collectives=coll, memory=mem,
+            hbm_ok=(bool(mem.get("peak_bytes", 0) <= HBM_BYTES)
+                    if mem.get("peak_bytes") else
+                    (bool(arg_bytes + mem.get("temp_bytes", 0) <= HBM_BYTES)
+                     if "error" not in mem else None)),
+            roofline={**terms, "dominant": dominant,
+                      "model_flops": mf,
+                      "useful_flops_ratio": mf / max(flops_global, 1.0)},
+            attn_variant=("window" if cfg.attn_window and not base_cfg.attn_window
+                          else "native"),
+            head_padding={
+                "n_heads": [base_cfg.n_heads, cfg.n_heads],
+                "n_kv_heads": [base_cfg.n_kv_heads, cfg.n_kv_heads],
+                "ssm_heads": [base_cfg.ssm_n_heads, cfg.ssm_n_heads]
+                if cfg.family in ("ssm", "hybrid") else None,
+            },
+        )
+    except Exception as e:
+        import traceback
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    result["total_s"] = round(time.time() - t0, 1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in INPUT_SHAPES] + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else [s.name for s in INPUT_SHAPES]
+    meshes = [args.mesh] if args.mesh != "both" else ["pod", "multipod"]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}_{shape}_{mesh_kind}".replace("/", "-")
+                if args.variant != "baseline":
+                    tag += f"_{args.variant}" 
+                path = os.path.join(args.out_dir, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"skip (exists): {tag}")
+                    continue
+                print(f"=== {tag} ===", flush=True)
+                res = run_one(arch, shape, multi_pod=(mesh_kind == "multipod"),
+                              variant=args.variant)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1, default=float)
+                status = "OK" if res["ok"] else f"FAIL: {res.get('error')}"
+                rt = res.get("roofline", {})
+                print(f"  -> {status}  compile={res.get('compile_s')}s "
+                      f"dominant={rt.get('dominant')} "
+                      f"terms={ {k: f'{v:.2e}' for k, v in rt.items() if k.endswith('_s')} }",
+                      flush=True)
+                gc.collect()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,378 @@
+"""Static analyzer for partitioned HLO text → roofline terms.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, but a layer
+scan executes it L times — so both FLOPs and bytes would be undercounted by
+~L×. This walker parses the HLO module into computations, builds a per-
+computation symbol table (every instruction line defines ``%name = shape op``),
+and accumulates three trip-count-weighted quantities from the ENTRY:
+
+* **flops**  — 2 · |result| · |contracted dims| for every ``dot`` (recursing
+  into fusions/calls/while bodies; MXU work),
+* **hbm bytes** — Σ (operand + result bytes) over *top-level* kernel
+  instructions (fusions, dots, copies, slices, …) — fusion internals are
+  VMEM-resident and excluded; while bodies are weighted by trip count,
+* **collective bytes** — ring-model traffic per chip: all-reduce ≈ 2× result,
+  all-gather ≈ result, reduce-scatter ≈ max operand, all-to-all /
+  collective-permute ≈ result.
+
+All quantities are per-device (the partitioned module has per-device shapes).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DT_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+([\w\-]+)\((.*)$"
+)
+_COMP_DEF_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_WHILE_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=\{?(%[\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute")
+
+# HBM-traffic model: the CPU backend fuses differently from TPU (and inserts
+# loop-invariant copies / materialized converts TPU would never emit), so we
+# count only genuine materialization points:
+#   * matmuls: operands + result (weight streams, activation reads/writes)
+#   * dynamic-slice / gather: the sliced bytes (scan-stacked weight streaming)
+#   * dynamic-update-slice / scatter: 2 × update bytes (in-place RMW of the
+#     slice — stacked grad buffers, KV-cache writes)
+#   * collectives: operands + result
+# Fusions dispatch on their root op; convert/copy/pad/elementwise(-rooted)
+# fusions are assumed fused into consumers on TPU and contribute nothing.
+_DOT_OPS = {"dot", "ragged-dot", "convolution"}
+_SLICE_READ_OPS = {"dynamic-slice", "gather"}
+_SLICE_WRITE_OPS = {"dynamic-update-slice", "scatter"}
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    """Total (elements, bytes) across all shapes found in ``text``."""
+    elems, bts = 0, 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bts += n * _DT_BYTES[dt]
+    return elems, bts
+
+
+def _shape_dims(text: str) -> List[List[int]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DT_BYTES:
+            continue
+        out.append([int(d) for d in dims.split(",") if d])
+    return out
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+# instructions whose op_name contains this marker belong to a region that runs
+# as a Pallas kernel on TPU: their intermediates are VMEM-resident, so they
+# contribute FLOPs and collectives but no HBM traffic.
+FUSED_KERNEL_MARKER = "fusedkernel_"
+
+
+@dataclass
+class Instr:
+    name: str
+    result: str          # result shape text (may be tuple)
+    opcode: str
+    rest: str            # everything after the opening paren
+    in_kernel: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # %name -> shape text
+    producer: Dict[str, "Instr"] = field(default_factory=dict)
+    root: Optional["Instr"] = None
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: {o: 0.0 for o in COLL_OPS})
+    coll_counts: Dict[str, int] = field(default_factory=lambda: {o: 0 for o in COLL_OPS})
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    def as_dict(self) -> dict:
+        d = {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+             "total_bytes": self.total_coll_bytes}
+        d.update({f"{k}_bytes": v for k, v in self.coll_bytes.items()})
+        d.update({f"{k}_count": v for k, v in self.coll_counts.items()})
+        return d
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line.strip():
+            continue
+        stripped = line.strip()
+        if not line.startswith(" ") and stripped.endswith("{"):
+            m = _COMP_DEF_RE.match(stripped)
+            if m:
+                current = Computation(name=m.group(2).lstrip("%"))
+                comps[current.name] = current
+                if m.group(1):
+                    entry = current.name
+                continue
+        if stripped == "}":
+            continue
+        if current is None:
+            continue
+        im = _INSTR_RE.match(stripped)
+        if im:
+            meta = _META_RE.search(stripped)
+            ins = Instr(name=im.group(1), result=im.group(2),
+                        opcode=im.group(3), rest=im.group(4),
+                        in_kernel=bool(meta and FUSED_KERNEL_MARKER in meta.group(1)))
+            current.instrs.append(ins)
+            current.shapes[ins.name] = ins.result
+            current.producer[ins.name] = ins
+            if stripped.startswith("ROOT"):
+                current.root = ins
+        elif "parameter(" in stripped and "=" in stripped:
+            # e.g. "%p = f32[..] parameter(0)" already matched; fallback no-op
+            pass
+    return comps, entry
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Operand %names inside the call parens (stop at attribute list)."""
+    depth = 1
+    args = []
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args = _OPERAND_RE.findall(rest[:i])
+                break
+    else:
+        args = _OPERAND_RE.findall(rest)
+    return args
+
+
+def _instr_hbm_bytes(ins: Instr, comp: Computation,
+                     comps: Dict[str, Computation]) -> float:
+    """HBM traffic attributed to one top-level instruction (see model above)."""
+    op_names = _operand_names(ins.rest)
+
+    def operand_bytes(slice_caps: Optional[Dict[int, int]] = None) -> float:
+        tot = 0.0
+        for i_op, n in enumerate(op_names):
+            full = _shape_elems_bytes(comp.shapes.get(n, ""))[1]
+            if slice_caps and i_op in slice_caps:
+                tot += min(full, slice_caps[i_op])
+            else:
+                tot += full
+        return tot
+
+    _, res_b = _shape_elems_bytes(ins.result)
+    if ins.opcode in _DOT_OPS:
+        return res_b + operand_bytes()
+    if ins.opcode in _SLICE_READ_OPS:
+        return float(res_b)
+    if ins.opcode in _SLICE_WRITE_OPS:
+        upd = (_shape_elems_bytes(comp.shapes.get(op_names[1], ""))[1]
+               if len(op_names) > 1 else res_b)
+        return 2.0 * upd
+    if ins.opcode == "custom-call":
+        return res_b + operand_bytes()
+    if ins.opcode != "fusion":
+        return 0.0
+    # fusion: dispatch on the fused computation's root
+    cm = _CALLS_RE.search(ins.rest)
+    callee = comps.get(cm.group(1).lstrip("%")) if cm else None
+    if callee is None or callee.root is None:
+        return 0.0
+    root = _effective_root(callee)
+    if root.opcode in _DOT_OPS or root.opcode == "reduce":
+        return res_b + operand_bytes(_fusion_param_bytes(callee))
+    if root.opcode in _SLICE_READ_OPS:
+        return float(_shape_elems_bytes(root.result)[1])
+    if root.opcode in _SLICE_WRITE_OPS:
+        r_ops = _operand_names(root.rest)
+        upd = (_shape_elems_bytes(callee.shapes.get(r_ops[1], ""))[1]
+               if len(r_ops) > 1 else 0)
+        return 2.0 * upd
+    # convert/copy/pad/elementwise-rooted fusions: fused into consumers on TPU
+    return 0.0
+
+
+def _effective_root(comp: Computation) -> Instr:
+    """Unwrap layout-only root wrappers (bitcast/copy/convert/transpose/
+    reshape) to the instruction that actually defines the fusion's kind —
+    e.g. a ``bitcast(dynamic-update-slice(...))``-rooted fusion is a slice
+    write, not an elementwise fusion."""
+    root = comp.root
+    seen = 0
+    while root is not None and seen < 8 and root.opcode in (
+            "bitcast", "copy", "convert", "transpose", "reshape"):
+        ops = _operand_names(root.rest)
+        nxt = comp.producer.get(ops[0]) if ops else None
+        if nxt is None:
+            break
+        root = nxt
+        seen += 1
+    return root or comp.root
+
+
+def _fusion_param_bytes(comp: Optional[Computation]) -> Dict[int, int]:
+    """For a fused computation: parameter index -> effective read bytes when
+    the parameter is consumed via dynamic-slice/gather (weight streaming out
+    of a scan-stacked tensor reads one slice per trip, not the whole stack)."""
+    if comp is None:
+        return {}
+    param_of = {}
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            m = re.match(r"(\d+)", ins.rest)
+            if m:
+                param_of[ins.name] = int(m.group(1))
+    eff: Dict[int, int] = {}
+    for ins in comp.instrs:
+        if ins.opcode in ("dynamic-slice", "gather", "slice"):
+            ops = _operand_names(ins.rest)
+            if ops and ops[0] in param_of:
+                _, b = _shape_elems_bytes(ins.result)
+                idx = param_of[ops[0]]
+                eff[idx] = eff.get(idx, 0) + b
+    return eff
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = parse_module(text)
+    memo: Dict[str, HloStats] = {}
+
+    def comp_stats(cname: str, depth: int = 0) -> HloStats:
+        if cname in memo:
+            return memo[cname]
+        st = HloStats()
+        if depth > 20 or cname not in comps:
+            return st
+        comp = comps[cname]
+
+        def add_child(callee: str, mult: float):
+            sub = comp_stats(callee, depth + 1)
+            st.flops += mult * sub.flops
+            st.hbm_bytes += mult * sub.hbm_bytes
+            for op in COLL_OPS:
+                st.coll_bytes[op] += mult * sub.coll_bytes[op]
+
+        for ins in comp.instrs:
+            base = ins.opcode.replace("-start", "").replace("-done", "")
+            # ---- collectives ----
+            if base in COLL_OPS:
+                if ins.opcode.endswith("-done"):
+                    continue
+                _, res_b = _shape_elems_bytes(ins.result)
+                op_names = _operand_names(ins.rest)
+                op_b = [
+                    _shape_elems_bytes(comp.shapes.get(n, ""))[1] for n in op_names
+                ]
+                if base == "all-reduce":
+                    traffic = 2.0 * res_b
+                elif base == "reduce-scatter":
+                    traffic = float(max(op_b or [res_b]))
+                else:
+                    traffic = float(res_b)
+                st.coll_bytes[base] += traffic
+                st.coll_counts[base] += 1
+                st.hbm_bytes += res_b + sum(op_b)
+                continue
+            # ---- control flow ----
+            if ins.opcode == "while":
+                tm = _TRIP_RE.search(ins.rest)
+                bm = _WHILE_BODY_RE.search(ins.rest)
+                trips = int(tm.group(1)) if tm else 1
+                if bm:
+                    add_child(bm.group(1).lstrip("%"), trips)
+                continue
+            if ins.opcode in ("call", "fusion", "conditional", "custom-call",
+                              "async-start", "map", "reduce", "sort", "scatter",
+                              "select-and-scatter", "reduce-window"):
+                for cm in _CALLS_RE.finditer(ins.rest):
+                    callee = cm.group(1).lstrip("%")
+                    # fusion internals: FLOPs recurse, bytes do not (VMEM)
+                    sub = comp_stats(callee, depth + 1)
+                    st.flops += sub.flops
+                    for op in COLL_OPS:
+                        st.coll_bytes[op] += sub.coll_bytes[op]
+            # ---- flops: dots ----
+            if ins.opcode in ("dot", "ragged-dot"):
+                res_dims = _shape_dims(ins.result)
+                contract = _CONTRACT_RE.search(ins.rest)
+                op_names = _operand_names(ins.rest)
+                lhs_shape = _shape_dims(comp.shapes.get(op_names[0], "")) if op_names else []
+                n_res = 1
+                for d in (res_dims[0] if res_dims else []):
+                    n_res *= d
+                n_con = 1
+                if contract and lhs_shape:
+                    for idx in contract.group(1).split(","):
+                        if idx:
+                            n_con *= lhs_shape[0][int(idx)]
+                st.flops += 2.0 * n_res * n_con
+            elif ins.opcode == "convolution":
+                # rough: 2 * |result| * (contracted window)  — unused by our models
+                _, res_b = _shape_elems_bytes(ins.result)
+                st.flops += 2.0 * res_b
+            # ---- hbm bytes: materialization points only ----
+            if ins.in_kernel:
+                # Pallas-kernel (VMEM) region: intermediates are free, but
+                # tensors crossing INTO the kernel (KV caches, q/k/v panels —
+                # producers outside the scope) are genuine HBM reads.
+                for n in _operand_names(ins.rest):
+                    prod = comp.producer.get(n)
+                    if prod is None or not prod.in_kernel:
+                        st.hbm_bytes += _shape_elems_bytes(comp.shapes.get(n, ""))[1]
+                continue
+            st.hbm_bytes += _instr_hbm_bytes(ins, comp, comps)
+
+        memo[cname] = st
+        return st
+
+    root = entry or (max(comps, key=lambda c: len(comps[c].instrs)) if comps else None)
+    if root is None:
+        return HloStats()
+    res = comp_stats(root)
+    # aggregate static counts over all computations for reporting
+    total_counts = {op: 0 for op in COLL_OPS}
+    for c in comps.values():
+        for ins in c.instrs:
+            base = ins.opcode.replace("-start", "").replace("-done", "")
+            if base in COLL_OPS and not ins.opcode.endswith("-done"):
+                total_counts[base] += 1
+    res.coll_counts = total_counts
+    return res

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — critical because the dry-run must set
+``xla_force_host_platform_device_count`` *before* first jax init, while smoke
+tests must see the 1-CPU default.
+
+Target hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI,
+16 GiB HBM per chip; 256 chips (16×16) per pod, 2 pods via DCN/ICI.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants (roofline terms)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+HBM_BYTES = 16 * (1 << 30)      # per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (unit tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def n_chips(mesh) -> int:
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))

@@ -1,0 +1,304 @@
+"""Workload construction for the multi-pod dry-run: per-(arch × shape) config
+overrides, ShapeDtypeStruct input specs, sharding assignment, and the three
+step functions (train / prefill+predict / decode+predict).
+
+The ProD head is a first-class part of the serving steps: prefill returns
+(last-token logits, cache, length distribution, median prediction) — the
+paper's "reuse the served LLM's hidden states, single-shot, no auxiliary
+model" integration. Decode optionally re-predicts remaining length online
+(the paper's §5 future-work hook, TRAIL-style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import InputShape, ModelConfig, TrainConfig
+from repro.common.sharding import default_rules, tree_shardings
+from repro.kernels import ops as kops
+from repro.models.layers import unembed
+from repro.models.model_zoo import Model, Runtime, build_model, last_token_hidden
+from repro.training.trainer import make_train_step
+from repro.training.optim import make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# per-shape config adaptation
+# ---------------------------------------------------------------------------
+
+
+def cfg_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k requires sub-quadratic attention / sub-linear KV memory.
+
+    * ssm / hybrid / gemma3 run their native mechanism (gemma3's 10 global
+      layers keep the full 500k cache, context-parallel over the data axis);
+    * all other attention archs run the documented sliding-window decode
+      variant (8192-token KV ring) — full-attention 500k is NOT claimed.
+    """
+    if shape.name == "long_500k":
+        if cfg.family == "ssm" or cfg.attn_window or cfg.local_global_ratio:
+            return cfg
+        return cfg.with_overrides(attn_window=8192)
+    return cfg
+
+
+def tpu_shardable_cfg(cfg: ModelConfig, model_axis: int) -> ModelConfig:
+    """Pad head counts to make attention/SSD shardable over the model axis.
+
+    With a fixed 16-way tensor axis, head counts not divisible by 16 leave the
+    whole attention (or SSD) computation REPLICATED across the axis — a 16×
+    compute/bytes overhead the dry-run exposed on yi-34b (56 heads). The
+    TPU-native fix (MaxText-style) is to pad:
+
+    * GQA: pad q-heads-per-group so kv_heads × G' is divisible (yi: G 7→8);
+    * MHA: pad whole (q,k,v) head triplets (whisper 20→32, minicpm 36→48);
+    * SSD: pad state heads (mamba2 24→32).
+
+    head_dim is preserved; this is a documented architectural adaptation (the
+    `nopad` dry-run variant measures the cost of not doing it).
+    """
+    kw = {}
+    if cfg.family != "ssm" and cfg.n_heads % model_axis:
+        KV, G = cfg.n_kv_heads, cfg.q_per_kv
+        if KV % model_axis == 0 or (G > 1 and KV < model_axis):
+            # pad G until KV*G divisible by axis (keeps kv cache size)
+            Gp = G
+            while (KV * Gp) % model_axis:
+                Gp += 1
+            kw.update(n_heads=KV * Gp)
+        else:
+            # MHA-style: pad whole head triplets
+            Hp = cfg.n_heads
+            while Hp % model_axis:
+                Hp += 1
+            kw.update(n_heads=Hp, n_kv_heads=Hp if KV == cfg.n_heads else KV)
+    if cfg.family in ("ssm", "hybrid") and cfg.ssm_n_heads % model_axis:
+        Hs = cfg.ssm_n_heads
+        while Hs % model_axis:
+            Hs += 1
+        kw.update(ssm_heads=Hs)
+    return cfg.with_overrides(**kw) if kw else cfg
+
+
+def train_cfg_for(cfg: ModelConfig) -> TrainConfig:
+    """Arch-appropriate training setup for the dry-run train_step."""
+    opt = "adafactor" if cfg.param_count() > 1e11 else "adamw"
+    sched = "wsd" if cfg.name.startswith("minicpm") else "cosine"
+    return TrainConfig(optimizer=opt, schedule=sched, stable_steps=1000,
+                       remat="full")
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; zero allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(
+    cfg: ModelConfig, shape: InputShape
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (specs, logical_axes) for the model-input batch."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+
+    def add(name, shp, dt, ax):
+        specs[name] = _sds(shp, dt)
+        axes[name] = ax
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            add("embeds", (B, S, cfg.d_model), cfg.dtype,
+                ("batch", "seq", "act_embed"))
+            add("positions", (3, B, S), "int32", (None, "batch", "seq"))
+            if shape.kind == "train":
+                # next-token targets (text stream) alongside the embeddings
+                add("tokens", (B, S), "int32", ("batch", "seq"))
+        else:
+            add("tokens", (B, S), "int32", ("batch", "seq"))
+        if cfg.family == "encdec":
+            if "tokens" not in specs:
+                add("tokens", (B, S), "int32", ("batch", "seq"))
+            add("enc_embeds", (B, cfg.encoder_seq, cfg.d_model), cfg.dtype,
+                ("batch", "seq", "act_embed"))
+        if shape.kind == "train":
+            add("loss_mask", (B, S), "int32", ("batch", "seq"))
+        else:
+            add("lengths", (B,), "int32", ("batch",))
+    else:  # decode
+        add("tokens", (B,), "int32", ("batch",))
+        add("pos", (B,), "int32", ("batch",))
+        add("lengths", (B,), "int32", ("batch",))
+    return specs, axes
+
+
+def head_specs(cfg: ModelConfig) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    d, h, K = cfg.d_model, cfg.predictor_hidden, cfg.predictor_bins
+    specs = {
+        "w1": _sds((d, h), "float32"), "b1": _sds((h,), "float32"),
+        "w2": _sds((h, K), "float32"), "b2": _sds((K,), "float32"),
+        "edges": _sds((K + 1,), "float32"),
+    }
+    axes = {
+        "w1": ("embed", "pred_hidden"), "b1": ("pred_hidden",),
+        "w2": ("pred_hidden", "bins"), "b2": ("bins",), "edges": (None,),
+    }
+    return specs, axes
+
+
+def opt_state_axes(params_axes: Any, optimizer: str) -> Any:
+    """Optimizer-state logical axes: like the params but with the weight
+    d_model dim remapped to ``opt_embed`` → ZeRO-sharded over the data axes
+    (moments are only touched elementwise, so any sharding is legal)."""
+    is_ax = lambda x: isinstance(x, tuple)
+    zero = lambda ax: tuple("opt_embed" if a == "embed" else a for a in ax)
+    if optimizer == "adamw":
+        remapped = jax.tree_util.tree_map(zero, params_axes, is_leaf=is_ax)
+        return {"m": remapped, "v": remapped}
+
+    def st(ax):
+        ax = zero(ax)
+        if len(ax) >= 2:
+            return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+        return {"v": ax}
+
+    return jax.tree_util.tree_map(st, params_axes, is_leaf=is_ax)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    "baseline": {},
+    # §Perf iteration knobs (EXPERIMENTS.md):
+    "causal_skip": {"causal_skip": True},
+    "moe_tight": {"moe_cap_slack": 1.0},
+    "moe_partial": {"moe_fsdp_mode": "partial"},
+    "int8kv": {"kv_quant": True},
+    "seqpar": {"seq_shard": True},
+    "nopad": {"pad_heads": False},
+    # composites used by the hillclimbs
+    "train_opt": {"causal_skip": True, "moe_cap_slack": 1.0, "seq_shard": True},
+    "train_tight": {"causal_skip": True, "moe_cap_slack": 1.0},
+    "decode_opt": {"kv_quant": True, "moe_fsdp_mode": "partial"},
+}
+
+
+def build_steps(cfg: ModelConfig, shape: InputShape, mesh=None,
+                pad_heads: bool = True, variant: str = "baseline") -> Dict[str, Any]:
+    """Assemble everything the dry-run needs for one (arch, shape) pair:
+
+    returns dict with: step (callable), arg_specs (tuple of pytrees of
+    ShapeDtypeStruct), arg_shardings (matching pytrees of NamedSharding),
+    out_shardings (prefix pytree or None), model, cfg.
+    """
+    knobs = dict(VARIANTS[variant])
+    if not knobs.pop("pad_heads", True):
+        pad_heads = False
+    cfg = cfg_for_shape(cfg, shape)
+    if mesh is not None and pad_heads and "model" in mesh.axis_names:
+        cfg = tpu_shardable_cfg(cfg, int(mesh.shape["model"]))
+    model = build_model(cfg)
+    rt = Runtime(mesh=mesh, remat="full" if shape.kind == "train" else "none",
+                 **knobs)
+    rules = None
+    if mesh is not None:
+        rules = default_rules(mesh)
+        if shape.kind == "decode":
+            # KV-cache layout: shard kv-heads over `model` when divisible;
+            # otherwise context-parallel — shard the cache sequence dim over
+            # `model` (flash-decode partial softmax + all-reduce). long_500k
+            # (batch=1) additionally spreads the sequence over the free data
+            # axes. Without this, a 32k×128-request GQA cache is 64 GB/chip.
+            kv_ok = cfg.n_kv_heads % int(mesh.shape.get("model", 1)) == 0
+            long_ctx = shape.name == "long_500k"
+            if kv_ok:
+                rules["cache_seq"] = ("data",) if long_ctx else None
+            else:
+                rules["cache_seq"] = ("data", "model") if long_ctx else ("model",)
+
+    def shard(axes_tree, shape_tree):
+        if mesh is None:
+            return None
+        return tree_shardings(axes_tree, shape_tree, mesh, rules)
+
+    p_shapes = model.param_shapes()
+    p_axes = model.param_axes()
+    p_shard = shard(p_axes, p_shapes)
+    b_specs, b_axes = input_specs(cfg, shape)
+    b_shard = shard(b_axes, b_specs)
+
+    if shape.kind == "train":
+        tcfg = train_cfg_for(cfg)
+        opt = make_optimizer(tcfg)
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_axes = opt_state_axes(p_axes, tcfg.optimizer)
+        o_shard = shard(o_axes, o_shapes)
+        state_specs = {"params": p_shapes, "opt_state": o_shapes,
+                       "step": _sds((), "float32")}
+        state_shard = (
+            {"params": p_shard, "opt_state": o_shard,
+             "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+            if mesh is not None else None
+        )
+        step = make_train_step(model, tcfg, rt)
+        return dict(
+            step=step, arg_specs=(state_specs, b_specs),
+            arg_shardings=(state_shard, b_shard) if mesh is not None else None,
+            out_shardings=(state_shard, None) if mesh is not None else None,
+            model=model, cfg=cfg, tcfg=tcfg,
+        )
+
+    h_specs, h_axes = head_specs(cfg)
+    h_shard = shard(h_axes, h_specs)
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, head, batch):
+            _, hidden, cache, _ = model.prefill(params, batch, rt,
+                                                logits_mode="none")
+            phi = last_token_hidden(hidden, batch["lengths"])
+            last_logits = unembed(phi, params["embed"], params.get("head"))
+            probs, pred = kops.prod_head(
+                phi, head["w1"], head["b1"], head["w2"], head["b2"],
+                head["edges"], impl="xla",
+            )
+            return last_logits, cache, probs, pred
+
+        return dict(
+            step=prefill_step, arg_specs=(p_shapes, h_specs, b_specs),
+            arg_shardings=(p_shard, h_shard, b_shard) if mesh is not None else None,
+            out_shardings=None, model=model, cfg=cfg,
+        )
+
+    # decode: one token vs. a cache of shape.seq_len
+    c_shapes = model.cache_shapes(shape.global_batch, shape.seq_len,
+                                  kv_quant=rt.kv_quant)
+    c_axes = model.cache_axes(kv_quant=rt.kv_quant)
+    c_shard = shard(c_axes, c_shapes)
+
+    def decode_step(params, head, batch, cache):
+        logits, hidden, new_cache = model.decode_step(params, batch, cache, rt)
+        probs, pred = kops.prod_head(
+            hidden, head["w1"], head["b1"], head["w2"], head["b2"],
+            head["edges"], impl="xla",
+        )
+        return logits, new_cache, pred
+
+    return dict(
+        step=decode_step, arg_specs=(p_shapes, h_specs, b_specs, c_shapes),
+        arg_shardings=(p_shard, h_shard, b_shard, c_shard)
+        if mesh is not None else None,
+        out_shardings=(None, c_shard, None) if mesh is not None else None,
+        model=model, cfg=cfg,
+    )

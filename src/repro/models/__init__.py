@@ -1,0 +1,2 @@
+"""Model zoo: dense GQA/MQA decoders, MoE, Mamba2/SSD, Zamba2 hybrid,
+Whisper enc-dec, and Qwen2-VL M-RoPE — all as pure-functional JAX models."""

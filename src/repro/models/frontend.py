@@ -1,0 +1,45 @@
+"""Modality frontend *stubs* (the one sanctioned carve-out).
+
+Per the assignment, [audio] and [vlm] architectures implement the transformer
+backbone only; the mel+conv audio codec and the ViT/SigLIP vision tower are
+stubbed — these helpers produce the frame/patch embeddings (and M-RoPE
+position streams) with the right shapes/dtypes that a real frontend would.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+
+
+def audio_frame_embeds(key, cfg: ModelConfig, batch: int) -> jax.Array:
+    """Stub for Whisper's mel+conv frontend output: (B, encoder_seq, d)."""
+    return jax.random.normal(key, (batch, cfg.encoder_seq, cfg.d_model)).astype(
+        cfg.dtype
+    ) * 0.02
+
+
+def vlm_embeds(key, cfg: ModelConfig, batch: int, seq: int, n_patches: int = 0):
+    """Stub for Qwen2-VL: interleaved patch+text embeddings and M-RoPE ids.
+
+    The first ``n_patches`` positions emulate vision tokens laid out on an
+    (h, w) grid (dynamic resolution); the rest are text. Returns
+    (embeds (B,S,d), positions (3,B,S)).
+    """
+    n_patches = n_patches or min(seq // 4, 256)
+    emb = jax.random.normal(key, (batch, seq, cfg.d_model)).astype(cfg.dtype) * 0.02
+    side = max(int(n_patches ** 0.5), 1)
+    t = jnp.concatenate(
+        [jnp.zeros(n_patches, jnp.int32),
+         jnp.arange(seq - n_patches, dtype=jnp.int32) + 1]
+    )
+    hh = jnp.concatenate(
+        [jnp.arange(n_patches, dtype=jnp.int32) // side, t[n_patches:]]
+    )
+    ww = jnp.concatenate(
+        [jnp.arange(n_patches, dtype=jnp.int32) % side, t[n_patches:]]
+    )
+    pos = jnp.stack([t, hh, ww])  # (3, S)
+    return emb, jnp.broadcast_to(pos[:, None], (3, batch, seq))

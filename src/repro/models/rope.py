@@ -1,0 +1,66 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head-dim frequency bands into three sections driven by
+(temporal, height, width) position streams; for pure text the three streams
+coincide and M-RoPE reduces exactly to RoPE (arXiv:2409.12191).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def mrope_section(head_dim: int) -> Tuple[int, int, int]:
+    """Frequency-band split (t, h, w); qwen2-vl uses (16, 24, 24) for hd=128."""
+    half = head_dim // 2
+    t = half - 2 * (3 * half // 8)
+    hw = 3 * half // 8
+    return (t, hw, hw)
+
+
+def rope_angles(
+    positions: jax.Array,  # (B, S) int32 or (3, B, S) for M-RoPE
+    head_dim: int,
+    theta: float,
+    use_mrope: bool = False,
+) -> jax.Array:
+    """Return rotation angles of shape (B, S, head_dim//2)."""
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    if not use_mrope:
+        if positions.ndim == 3:  # text-only M-RoPE degenerates to stream 0
+            positions = positions[0]
+        return positions[..., None].astype(jnp.float32) * freqs
+    assert positions.ndim == 3 and positions.shape[0] == 3, positions.shape
+    t, h, w = mrope_section(head_dim)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (3, B, S, half)
+    return jnp.concatenate(
+        [ang[0, ..., :t], ang[1, ..., t : t + h], ang[2, ..., t + h :]], axis=-1
+    )
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, H, head_dim); angles: (B, S, head_dim//2)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+def positions_from_tokens(batch: int, seq: int, offset=0) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def text_mrope_positions(batch: int, seq: int, offset=0) -> jax.Array:
+    p = positions_from_tokens(batch, seq, offset)
+    return jnp.broadcast_to(p[None], (3, batch, seq))

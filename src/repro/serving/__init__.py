@@ -1,0 +1,2 @@
+"""Serving substrate: requests, KV-cache reservation accounting, schedulers,
+and continuous-batching engines (discrete-event simulator + real tiny-LM)."""

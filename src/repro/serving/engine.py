@@ -1,0 +1,242 @@
+"""Continuous-batching engines.
+
+* :class:`SimEngine` — discrete-event simulator (Track A): slot-based
+  continuous batching, KV reservation accounting, pluggable scheduler.
+  One engine step == one decode step for every active slot (the TPU-idiomatic
+  fixed-shape batching model). Used to quantify what better length prediction
+  buys in throughput/latency/memory.
+
+* :class:`RealEngine` — Track B: actually decodes a tiny JAX LM with
+  temperature sampling, slot-based batching, real KV caches, and the fused
+  ProD head on real last-token hidden states.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.kvcache import KVCacheManager
+from repro.serving.request import Request
+from repro.serving.scheduler import (Policy, annotate_predictions, pick_next,
+                                     predicted_remaining)
+
+
+@dataclass
+class ServeStats:
+    policy: str
+    makespan: float
+    mean_latency: float
+    p90_latency: float
+    mean_wait: float
+    throughput: float              # completed tokens / step
+    kv_waste_ratio: float
+    overflow_events: int
+    peak_reserved: int
+    completed: int
+    preemptions: int = 0
+
+    def row(self) -> dict:
+        return self.__dict__.copy()
+
+
+class SimEngine:
+    """Discrete-event continuous-batching simulator."""
+
+    def __init__(self, max_slots: int, kv_budget: int, policy: Policy,
+                 predictor=None):
+        self.max_slots = max_slots
+        self.policy = policy
+        self.predictor = predictor
+        self.kv = KVCacheManager(budget_tokens=kv_budget)
+
+    def run(self, requests: List[Request], max_steps: int = 1_000_000) -> ServeStats:
+        reqs = [Request(**{**r.__dict__}) for r in requests]  # defensive copy
+        annotate_predictions(reqs, self.predictor, self.policy)
+        queue: List[Request] = sorted(reqs, key=lambda r: r.arrival)
+        active: List[Request] = []
+        done: List[Request] = []
+        t = 0.0
+        preemptions = 0
+        while (queue or active) and t < max_steps:
+            # admit while there is a slot + KV budget
+            while len(active) < self.max_slots:
+                i = pick_next(queue, self.policy, t)
+                if i is None:
+                    break
+                cand = queue[i]
+                need = int(cand.prompt_len + cand.reserve_len)
+                if not self.kv.admit(cand.rid, need):
+                    break  # KV-bound: head-of-line blocks on memory
+                queue.pop(i)
+                if cand.t_start is None:
+                    cand.t_start = t
+                self.kv.use(cand.rid, cand.prompt_len + cand.generated)
+                active.append(cand)
+            # SRTF preemption: a waiting request with much shorter predicted
+            # remaining evicts the longest-remaining active one (ProD-O's
+            # remaining-length signal makes this decision possible)
+            if self.policy.preempt and active:
+                i = pick_next(queue, self.policy, t)
+                if i is not None:
+                    newcomer = queue[i]
+                    victim = max(active, key=predicted_remaining)
+                    if (predicted_remaining(victim)
+                            > self.policy.preempt_factor
+                            * predicted_remaining(newcomer)):
+                        active.remove(victim)
+                        self.kv.release(victim.rid)
+                        queue.append(victim)   # resumes later with progress kept
+                        preemptions += 1
+            # one decode step for all active slots
+            t += 1.0
+            for r in list(active):
+                r.generated += 1
+                self.kv.use(r.rid, 1)
+                used = r.prompt_len + r.generated
+                if used > int(r.prompt_len + r.reserve_len):
+                    # outgrew reservation: grow or stall (overflow penalty)
+                    if not self.kv.grow(r.rid, max(int(0.25 * r.reserve_len), 16)):
+                        continue  # stalled this step, retries next step
+                    r.overflows += 1
+                    r.reserve_len *= 1.25
+                if r.generated >= r.true_len:
+                    r.t_finish = t
+                    self.kv.release(r.rid)
+                    active.remove(r)
+                    done.append(r)
+            self.kv.tick()
+            if not active and queue:
+                nxt = min(q.arrival for q in queue)
+                t = max(t, float(np.floor(nxt)))
+        lat = np.array([r.latency for r in done])
+        waits = np.array([r.wait for r in done])
+        toks = sum(r.true_len for r in done)
+        return ServeStats(
+            policy=f"{self.policy.order}+{self.policy.reserve}",
+            makespan=t,
+            mean_latency=float(lat.mean()) if len(lat) else float("inf"),
+            p90_latency=float(np.quantile(lat, 0.9)) if len(lat) else float("inf"),
+            mean_wait=float(waits.mean()) if len(waits) else float("inf"),
+            throughput=toks / max(t, 1.0),
+            kv_waste_ratio=self.kv.waste_ratio,
+            overflow_events=self.kv.overflow_events,
+            peak_reserved=self.kv.peak_reserved,
+            completed=len(done),
+            preemptions=preemptions,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Track B: real generation with a tiny JAX LM
+# ---------------------------------------------------------------------------
+
+
+class RealEngine:
+    """Batched sampling engine over a real (tiny) model: prefill once, decode
+    until EOS, harvest last-token hidden states for the ProD predictor."""
+
+    def __init__(self, model, params, rt=None, temperature: float = 0.8,
+                 max_new: int = 256, eos_id: int = 2):
+        import jax
+        import jax.numpy as jnp
+        from repro.models.model_zoo import Runtime
+
+        self.model = model
+        self.params = params
+        self.rt = rt or Runtime.local()
+        self.temp = temperature
+        self.max_new = max_new
+        self.eos = eos_id
+        self._jit_prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, self.rt)
+        )
+        self._jit_decode = jax.jit(
+            lambda p, b, c: model.decode_step(p, b, c, self.rt)
+        )
+
+    def generate(self, prompts: np.ndarray, prompt_lens: np.ndarray, key,
+                 collect_hidden: bool = True, collect_per_step: bool = False):
+        """prompts: (B, Sp) right-padded. Returns dict with lengths (B,),
+        phi (B, d) last-prompt-token hidden, tokens (B, max_new), and —
+        with ``collect_per_step`` — step_hidden (B, max_new, d) + step_valid
+        (B, max_new), the per-decode-step states φ(z_t) for the online
+        remaining-length predictor (paper §2.2's general t>0 case)."""
+        import jax
+        import jax.numpy as jnp
+        from repro.models.model_zoo import last_token_hidden
+
+        B, Sp = prompts.shape
+        cfg = self.model.cfg
+        valid = np.arange(Sp)[None, :] < prompt_lens[:, None]
+        batch = {"tokens": jnp.asarray(prompts),
+                 "attn_valid": jnp.asarray(valid)}
+        logits, hidden, cache, _ = self._jit_prefill(self.params, batch)
+        phi = last_token_hidden(hidden, jnp.asarray(prompt_lens)) if collect_hidden else None
+
+        # move prefill cache into a decode cache with room for max_new tokens
+        cache = self._grow_cache(cache, Sp + self.max_new, Sp)
+        lengths = jnp.asarray(prompt_lens, jnp.int32)
+        last_logit = logits[jnp.arange(B), lengths - 1]
+        finished = jnp.zeros(B, bool)
+        out_tokens = np.zeros((B, self.max_new), np.int32)
+        gen_len = np.zeros(B, np.int64)
+        step_hidden = (np.zeros((B, self.max_new, cfg.d_model), np.float32)
+                       if collect_per_step else None)
+        step_valid = (np.zeros((B, self.max_new), bool)
+                      if collect_per_step else None)
+        cur_logits = last_logit
+        for step in range(self.max_new):
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, cur_logits / self.temp, axis=-1)
+            nxt = jnp.where(finished, self.eos, nxt).astype(jnp.int32)
+            out_tokens[:, step] = np.asarray(nxt)
+            newly = (~finished) & (nxt == self.eos)
+            finished = finished | (nxt == self.eos)
+            gen_len = np.where(np.asarray(newly), step + 1, gen_len)
+            if bool(finished.all()):
+                break
+            dbatch = {"tokens": nxt, "pos": lengths, "lengths": lengths + 1}
+            cur_logits, hid_t, cache = self._jit_decode(self.params, dbatch, cache)
+            if collect_per_step:
+                step_hidden[:, step] = np.asarray(hid_t, np.float32)
+                step_valid[:, step] = ~np.asarray(finished)
+            lengths = lengths + jnp.where(finished, 0, 1)
+        gen_len = np.where(gen_len == 0, self.max_new, gen_len)
+        return {"lengths": gen_len, "phi": np.asarray(phi) if phi is not None else None,
+                "tokens": out_tokens, "step_hidden": step_hidden,
+                "step_valid": step_valid}
+
+    def _grow_cache(self, cache, new_len: int, old_len: int):
+        import jax.numpy as jnp
+        import jax.tree_util as jtu
+
+        def grow(x):
+            # attention caches: (..., S, KV, hd) with S == old_len (ring caches
+            # are allocated at their window and left alone)
+            if x.ndim >= 4 and x.shape[-3] == old_len:
+                pad = [(0, 0)] * x.ndim
+                pad[-3] = (0, new_len - old_len)
+                return jnp.pad(x, pad)
+            return x
+
+        return jtu.tree_map(grow, cache)
+
+    def repeated_sampling(self, prompts: np.ndarray, prompt_lens: np.ndarray,
+                          r: int, seed: int = 0):
+        """The paper's data-collection loop: r independent generations per
+        prompt. Returns (lengths (B, r), phi (B, d))."""
+        import jax
+
+        B = prompts.shape[0]
+        lens = np.zeros((B, r), np.int64)
+        phi = None
+        for j in range(r):
+            out = self.generate(prompts, prompt_lens, jax.random.PRNGKey(seed * 997 + j),
+                                collect_hidden=(j == 0))
+            lens[:, j] = out["lengths"]
+            if j == 0:
+                phi = out["phi"]
+        return lens, phi

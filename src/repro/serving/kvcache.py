@@ -1,0 +1,65 @@
+"""KV-cache reservation accounting (the paper's §4 serving motivation).
+
+Serving frameworks that reserve for the *maximum possible* output waste memory
+and cap the batch; reserving for the *predicted* output admits more concurrent
+requests but risks overflow re-reservations. This manager tracks both costs so
+the benchmark can quantify the trade-off that length prediction buys.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass
+class KVCacheManager:
+    budget_tokens: int                       # total KV slots across the pool
+    reserved: Dict[int, int] = field(default_factory=dict)
+    used: Dict[int, int] = field(default_factory=dict)
+    peak_reserved: int = 0
+    overflow_events: int = 0
+    total_reserved_steps: float = 0.0        # token-steps of reservation
+    total_used_steps: float = 0.0
+
+    @property
+    def reserved_now(self) -> int:
+        return sum(self.reserved.values())
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.reserved_now + n_tokens <= self.budget_tokens
+
+    def admit(self, rid: int, n_tokens: int) -> bool:
+        if not self.can_admit(n_tokens):
+            return False
+        self.reserved[rid] = n_tokens
+        self.used[rid] = 0
+        self.peak_reserved = max(self.peak_reserved, self.reserved_now)
+        return True
+
+    def grow(self, rid: int, extra: int) -> bool:
+        """Overflow: the request outgrew its reservation (mispredicted short)."""
+        if self.reserved_now + extra > self.budget_tokens:
+            return False
+        self.reserved[rid] += extra
+        self.overflow_events += 1
+        self.peak_reserved = max(self.peak_reserved, self.reserved_now)
+        return True
+
+    def use(self, rid: int, n_tokens: int = 1):
+        self.used[rid] = self.used.get(rid, 0) + n_tokens
+
+    def tick(self):
+        """Accumulate per-step reservation/usage integrals (waste metric)."""
+        self.total_reserved_steps += self.reserved_now
+        self.total_used_steps += sum(self.used.values())
+
+    def release(self, rid: int):
+        self.reserved.pop(rid, None)
+        self.used.pop(rid, None)
+
+    @property
+    def waste_ratio(self) -> float:
+        if self.total_reserved_steps == 0:
+            return 0.0
+        return 1.0 - self.total_used_steps / self.total_reserved_steps

@@ -1,0 +1,56 @@
+"""Request model and workload generators."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float                      # arrival time (engine steps)
+    prompt_len: int
+    true_len: int                       # realized decode length (sim: sampled)
+    phi: Optional[np.ndarray] = None    # served-LLM hidden state (predictor input)
+    predicted_len: Optional[float] = None
+    reserve_len: Optional[float] = None
+    # engine bookkeeping
+    t_start: Optional[float] = None
+    t_finish: Optional[float] = None
+    generated: int = 0
+    overflows: int = 0
+
+    @property
+    def wait(self) -> float:
+        return (self.t_start - self.arrival) if self.t_start is not None else np.inf
+
+    @property
+    def latency(self) -> float:
+        return (self.t_finish - self.arrival) if self.t_finish is not None else np.inf
+
+
+def workload_from_scenario(
+    data, n: int, seed: int = 0, arrival_rate: float = 4.0,
+) -> List[Request]:
+    """Build a Poisson-arrival workload from a Track-A ScenarioData test split.
+
+    Each request's true decode length is one *fresh* draw from its prompt's
+    length distribution (sample column r-1), and φ is the last-token view —
+    i.e. the predictor never saw the realized length, as in deployment.
+    """
+    rng = np.random.default_rng(seed)
+    n = min(n, data.len_test.shape[0])
+    idx = rng.permutation(data.len_test.shape[0])[:n]
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, size=n))
+    reqs = []
+    for i, (j, t) in enumerate(zip(idx, arrivals)):
+        reqs.append(Request(
+            rid=i, arrival=float(t),
+            prompt_len=int(rng.integers(16, 256)),
+            true_len=int(data.len_test[j, -1]),
+            phi=data.phi_test["last"][j],
+        ))
+    return reqs

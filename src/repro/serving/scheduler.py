@@ -1,0 +1,77 @@
+"""Schedulers: FCFS, SJF on predicted length, and the uncertainty-aware
+quantile policy that only a distributional predictor (ProD-D) enables.
+
+Reservation policies:
+* ``max``       — reserve max_seq_len (vLLM-naive; zero overflow, max waste)
+* ``predicted`` — reserve predicted median × margin
+* ``quantile``  — reserve the q-th quantile of the ProD-D predictive
+                  distribution (per-request risk control; the CoRE-style
+                  learning-for-scheduling coupling)
+* ``oracle``    — reserve the realized length (upper bound)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclass(frozen=True)
+class Policy:
+    order: str = "fcfs"            # fcfs | sjf_pred | sjf_oracle | srtf_pred
+    reserve: str = "max"           # max | predicted | quantile | oracle
+    margin: float = 1.2            # multiplier for `predicted`
+    quantile: float = 0.9
+    max_seq_len: int = 4096
+    preempt: bool = False          # srtf: evict the longest-remaining active
+    preempt_factor: float = 2.0    # only if its remaining > factor × newcomer's
+
+
+def predicted_remaining(r: Request) -> float:
+    """Estimated remaining tokens (ProD-O style: static estimate − progress)."""
+    base = r.predicted_len if r.predicted_len is not None else float(r.true_len)
+    return max(base - r.generated, 1.0)
+
+
+def annotate_predictions(requests: List[Request], predictor, policy: Policy):
+    """Attach predicted median + reservation length from the ProD head."""
+    if predictor is None:
+        for r in requests:
+            r.predicted_len = None
+            r.reserve_len = float(policy.max_seq_len)
+            if policy.reserve == "oracle":
+                r.reserve_len = float(r.true_len)
+        return
+    import jax.numpy as jnp
+
+    phi = jnp.asarray(np.stack([r.phi for r in requests]))
+    med = np.asarray(predictor.predict(phi))
+    if policy.reserve == "quantile":
+        res = np.asarray(predictor.quantile(phi, policy.quantile))
+    elif policy.reserve == "predicted":
+        res = med * policy.margin
+    elif policy.reserve == "oracle":
+        res = np.array([r.true_len for r in requests], np.float32)
+    else:
+        res = np.full(len(requests), policy.max_seq_len, np.float32)
+    for r, m, rv in zip(requests, med, res):
+        r.predicted_len = float(m)
+        r.reserve_len = float(min(max(rv, 8.0), policy.max_seq_len))
+
+
+def pick_next(queue: List[Request], policy: Policy, now: float) -> Optional[int]:
+    """Index into `queue` of the next request to admit (arrived ones only)."""
+    avail = [i for i, r in enumerate(queue) if r.arrival <= now]
+    if not avail:
+        return None
+    if policy.order == "fcfs":
+        return min(avail, key=lambda i: queue[i].arrival)
+    if policy.order in ("sjf_pred", "srtf_pred"):
+        return min(avail, key=lambda i: predicted_remaining(queue[i]))
+    if policy.order == "sjf_oracle":
+        return min(avail, key=lambda i: queue[i].true_len)
+    raise ValueError(policy.order)

@@ -1,0 +1,1 @@
+"""Training substrate: optimizers, LR schedules, trainer loops, checkpoints."""

@@ -1,0 +1,71 @@
+"""Checkpointing: flat-path npz arrays + JSON manifest (no orbax dependency).
+
+Works for any pytree of arrays (params, optimizer state, predictor heads).
+Multi-host note: each process saves only addressable shards in a real
+deployment; on the CPU container this is the single-process path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, tree: Any, step: int = 0, name: str = "ckpt") -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    np.savez(path, **flat)
+    manifest = {
+        "step": step,
+        "n_arrays": len(flat),
+        "total_bytes": int(sum(v.nbytes for v in flat.values())),
+        "keys": sorted(flat),
+    }
+    with open(os.path.join(directory, f"{name}_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def latest_checkpoint(directory: str, name: str = "ckpt") -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    cands = sorted(
+        f for f in os.listdir(directory)
+        if f.startswith(name + "_") and f.endswith(".npz")
+    )
+    return os.path.join(directory, cands[-1]) if cands else None
+
+
+def restore_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (validates every leaf)."""
+    data = np.load(path)
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    extra = set(data.files) - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

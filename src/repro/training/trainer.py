@@ -1,0 +1,114 @@
+"""Generic training loop: pjit-able train step with grad clipping, gradient
+accumulation (microbatching), schedules, and periodic checkpointing."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+from repro.models.model_zoo import Model, Runtime
+from repro.training.optim import Optimizer, clip_by_global_norm, make_optimizer
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    def tree(self):
+        return {"params": self.params, "opt_state": self.opt_state, "step": self.step}
+
+
+def init_state(model: Model, key: jax.Array, tcfg: TrainConfig) -> TrainState:
+    params = model.init(key)
+    opt = make_optimizer(tcfg)
+    return TrainState(params=params, opt_state=opt.init(params),
+                      step=jnp.zeros((), jnp.float32))
+
+
+def make_train_step(
+    model: Model, tcfg: TrainConfig, rt: Runtime
+) -> Callable[[TrainState, Dict[str, jax.Array]], Any]:
+    """Returns train_step(state, batch) -> (state, metrics). Pure — jit/pjit at
+    the call site (the launcher attaches shardings)."""
+    import dataclasses
+
+    opt = make_optimizer(tcfg)
+    rt = dataclasses.replace(rt, remat=tcfg.remat if tcfg.remat != "none"
+                             else "none")
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, rt)
+
+    def train_step(state_tree, batch):
+        params = state_tree["params"]
+        n_micro = max(tcfg.microbatch, 1)
+        if n_micro > 1:
+            B = batch["tokens"].shape[0]
+            mb = B // n_micro
+
+            def micro(i, acc):
+                g_acc, l_acc = acc
+                sub = {k: jax.lax.dynamic_slice_in_dim(v, i * mb, mb, 0)
+                       for k, v in batch.items()}
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, sub)
+                g_acc = jax.tree_util.tree_map(lambda a, b: a + b, g_acc, g)
+                return (g_acc, l_acc + l)
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, loss = jax.lax.fori_loop(0, n_micro, micro, (g0, 0.0))
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        new_params, new_opt = opt.update(grads, state_tree["opt_state"], params,
+                                         state_tree["step"])
+        out_metrics = {"loss": loss, "grad_norm": gnorm}
+        out_metrics.update({k: v for k, v in (metrics or {}).items()})
+        return (
+            {"params": new_params, "opt_state": new_opt,
+             "step": state_tree["step"] + 1},
+            out_metrics,
+        )
+
+    return train_step
+
+
+def train_loop(
+    model: Model,
+    tcfg: TrainConfig,
+    data_iter: Iterator[Dict[str, jax.Array]],
+    n_steps: int,
+    rt: Optional[Runtime] = None,
+    log_every: int = 20,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    verbose: bool = True,
+) -> TrainState:
+    rt = rt or Runtime.local()
+    state = init_state(model, jax.random.PRNGKey(tcfg.seed), tcfg)
+    step_fn = jax.jit(make_train_step(model, tcfg, rt))
+    tree = state.tree()
+    t0 = time.time()
+    for i in range(n_steps):
+        batch = next(data_iter)
+        tree, metrics = step_fn(tree, batch)
+        if verbose and (i % log_every == 0 or i == n_steps - 1):
+            print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            from repro.training.checkpoint import save_checkpoint
+            save_checkpoint(ckpt_dir, tree, step=i + 1)
+    return TrainState(params=tree["params"], opt_state=tree["opt_state"],
+                      step=tree["step"])

@@ -1,0 +1,124 @@
+"""Unit + property tests for the paper-core bin grids, targets, and decoders."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bins as B
+from repro.core import targets as T
+
+settings.register_profile("ci", deadline=None, max_examples=40)
+settings.load_profile("ci")
+
+
+class TestBins:
+    def test_linear_edges(self):
+        e = B.linear_edges(4, 100.0)
+        np.testing.assert_allclose(np.asarray(e), [0, 25, 50, 75, 100])
+
+    def test_bin_index_bounds(self):
+        e = B.linear_edges(8, 80.0)
+        idx = B.bin_index(jnp.array([-5.0, 0.0, 10.0, 79.9, 80.0, 1e9]), e)
+        assert int(idx.min()) >= 0 and int(idx.max()) <= 7
+        assert int(idx[2]) == 1
+
+    def test_log_edges_start_zero(self):
+        e = B.log_edges(8, 1000.0)
+        assert float(e[0]) == 0.0 and float(e[-1]) == pytest.approx(1000.0)
+
+    @given(st.integers(4, 64), st.floats(10.0, 1e5))
+    def test_bin_index_roundtrip(self, K, bin_max):
+        e = B.make_edges(K, bin_max)
+        centers = B.bin_centers(e)
+        idx = B.bin_index(centers, e)
+        np.testing.assert_array_equal(np.asarray(idx), np.arange(K))
+
+    def test_median_decode_exact_on_concentrated(self):
+        e = B.linear_edges(10, 100.0)
+        probs = jnp.zeros((1, 10)).at[0, 3].set(1.0)
+        # whole mass in bin 3 -> median at the bin midpoint
+        assert float(B.decode_median(probs, e)[0]) == pytest.approx(35.0)
+
+    def test_median_decode_interpolation(self):
+        e = B.linear_edges(2, 20.0)
+        probs = jnp.array([[0.25, 0.75]])
+        # cdf crosses 0.5 inside bin 1: t = (0.5-0.25)/0.75 -> 10 + t*10
+        assert float(B.decode_median(probs, e)[0]) == pytest.approx(10 + 10 / 3, rel=1e-5)
+
+    @given(st.lists(st.floats(0.01, 1.0), min_size=4, max_size=16))
+    def test_median_decode_within_support(self, raw):
+        p = np.asarray(raw, np.float64)
+        p = p / p.sum()
+        e = B.linear_edges(len(p), 128.0)
+        m = float(B.decode_median(jnp.asarray(p)[None], e)[0])
+        assert 0.0 <= m <= 128.0
+
+    def test_median_less_tail_sensitive_than_mean(self):
+        """The paper's §2.4 argument: median decode is robust to tail mass."""
+        e = B.linear_edges(10, 1000.0)
+        base = jnp.zeros(10).at[1].set(0.9).at[2].set(0.1)
+        tail = jnp.zeros(10).at[1].set(0.9).at[9].set(0.1)
+        dm = abs(float(B.decode_median(tail[None], e)[0]) -
+                 float(B.decode_median(base[None], e)[0]))
+        dmean = abs(float(B.decode_mean(tail[None], e)[0]) -
+                    float(B.decode_mean(base[None], e)[0]))
+        assert dm < dmean
+
+
+class TestTargets:
+    def test_median_target_onehot(self):
+        e = B.linear_edges(8, 80.0)
+        L = jnp.array([[10.0, 12.0, 11.0, 200.0]])  # median 11.5 -> bin 1
+        y = T.median_target(L, e)
+        assert y.shape == (1, 8)
+        assert float(y.sum()) == 1.0 and int(jnp.argmax(y)) == 1
+
+    def test_dist_target_is_histogram(self):
+        e = B.linear_edges(4, 40.0)
+        L = jnp.array([[5.0, 15.0, 15.0, 35.0]])
+        p = T.dist_target(L, e)
+        np.testing.assert_allclose(np.asarray(p[0]), [0.25, 0.5, 0.0, 0.25])
+
+    @given(st.integers(1, 32), st.integers(2, 64))
+    def test_dist_target_normalized(self, r, K):
+        rng = np.random.default_rng(0)
+        L = jnp.asarray(rng.uniform(1, 500, size=(5, r)))
+        e = B.linear_edges(K, 600.0)
+        p = T.dist_target(L, e)
+        np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, rtol=1e-5)
+
+    @given(st.integers(0, 400))
+    def test_median_target_robust_to_tail_contamination(self, outlier_extra):
+        """Property (Obs. 2): replacing a minority of samples with arbitrarily
+        long generations does not move the median-target bin."""
+        e = B.linear_edges(32, 1000.0)
+        base = np.full(16, 100.0)
+        contaminated = base.copy()
+        contaminated[:7] = 900.0 + outlier_extra % 100  # minority
+        y0 = T.median_target(jnp.asarray(base)[None], e)
+        y1 = T.median_target(jnp.asarray(contaminated)[None], e)
+        assert int(jnp.argmax(y0)) == int(jnp.argmax(y1))
+
+    def test_mean_not_robust_same_contamination(self):
+        base = np.full(16, 100.0)
+        contaminated = base.copy()
+        contaminated[:7] = 900.0
+        assert abs(contaminated.mean() - base.mean()) > 300  # mean moves a lot
+
+    def test_single_target_matches_sample(self):
+        e = B.linear_edges(8, 80.0)
+        L = jnp.array([[10.0, 75.0]])
+        y0 = T.single_target(L, e, 0)
+        y1 = T.single_target(L, e, 1)
+        assert int(jnp.argmax(y0)) == 1 and int(jnp.argmax(y1)) == 7
+
+    def test_build_target_dispatch(self):
+        e = B.linear_edges(8, 80.0)
+        L = jnp.asarray(np.random.default_rng(0).uniform(1, 79, (3, 16)))
+        for kind in ("median", "dist", "single"):
+            y = T.build_target(L, e, kind)
+            assert y.shape == (3, 8)
+        with pytest.raises(ValueError):
+            T.build_target(L, e, "nope")

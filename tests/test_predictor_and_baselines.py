@@ -1,0 +1,114 @@
+"""Integration tests for predictor training, baselines, and the paper's
+qualitative claims on a small calibrated scenario."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import PredictorConfig
+from repro.core import bins as B
+from repro.core import targets as T
+from repro.core.baselines import METHODS, run_method
+from repro.core.metrics import mae, noise_radius
+from repro.core.predictor import train_predictor
+from repro.data import make_scenario
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    return make_scenario("qwen", "math", n_train=500, n_test=250, seed=3)
+
+
+@pytest.fixture(scope="module")
+def pcfg(scenario):
+    bm = float(np.quantile(scenario.len_train, 0.999) * 1.3)
+    return PredictorConfig(n_bins=48, bin_max=bm, epochs=15)
+
+
+def test_predictor_learns(scenario, pcfg):
+    edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
+    tgt = T.median_target(jnp.asarray(scenario.len_train, jnp.float32), edges)
+    p = train_predictor(jax.random.PRNGKey(0),
+                        jnp.asarray(scenario.phi_train["last"]), tgt, pcfg, edges)
+    pred = p.predict(jnp.asarray(scenario.phi_test["last"]))
+    med = T.sample_median(jnp.asarray(scenario.len_test, jnp.float32))
+    m = mae(pred, med)
+    const = mae(jnp.full_like(med, float(jnp.median(med))), med)
+    assert m < 0.9 * const, f"predictor ({m:.1f}) should beat constant ({const:.1f})"
+
+
+def test_predictor_quantiles_monotone(scenario, pcfg):
+    edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
+    tgt = T.dist_target(jnp.asarray(scenario.len_train, jnp.float32), edges)
+    p = train_predictor(jax.random.PRNGKey(0),
+                        jnp.asarray(scenario.phi_train["last"]), tgt, pcfg, edges)
+    phi = jnp.asarray(scenario.phi_test["last"][:32])
+    q50 = np.asarray(p.quantile(phi, 0.5))
+    q90 = np.asarray(p.quantile(phi, 0.9))
+    assert (q90 >= q50 - 1e-6).all()
+
+
+def test_prod_m_beats_single_supervision(scenario, pcfg):
+    """Tables 1 vs 2: repeated-sampling median supervision beats one-shot."""
+    k = jax.random.PRNGKey(1)
+    rep = run_method(k, scenario, "prod_m", pcfg, supervision="repeat")
+    single = run_method(k, scenario, "prod_m", pcfg, supervision="single",
+                        eval_target="median")
+    assert rep.test_mae < single.test_mae
+
+
+def test_prod_d_single_sample_raises(scenario, pcfg):
+    with pytest.raises(ValueError):
+        run_method(jax.random.PRNGKey(0), scenario, "prod_d", pcfg,
+                   supervision="single")
+
+
+def test_method_ordering_matches_paper(scenario, pcfg):
+    """Table 1 qualitative structure: ProD variants beat TRAIL-last; the
+    last-token view beats the proxy and entropy views; everything beats the
+    constant."""
+    k = jax.random.PRNGKey(2)
+    res = {m: run_method(jax.random.fold_in(k, i), scenario, m, pcfg)
+           for i, m in enumerate(METHODS)}
+    assert res["prod_d"].test_mae < res["trail_last"].test_mae
+    # the paper's ProD-M vs TRAIL-last gap is ~5%; allow small-sample noise
+    assert res["prod_m"].test_mae < res["trail_last"].test_mae * 1.05
+    assert res["trail_last"].test_mae < res["constant_median"].test_mae
+    assert res["trail_last"].test_mae < res["egtp"].test_mae
+
+
+def test_noise_radius_sane(scenario):
+    nr = noise_radius(jnp.asarray(scenario.len_test))
+    # qwen/math calibration target ~33 tokens (Table 1 noise radius)
+    assert 15 < nr < 70
+
+
+def test_constant_median_mae_matches_definition(scenario, pcfg):
+    res = run_method(jax.random.PRNGKey(0), scenario, "constant_median", pcfg)
+    med_tr = float(np.median(np.median(scenario.len_train, axis=1)))
+    med_te = np.median(scenario.len_test, axis=1)
+    want = float(np.mean(np.abs(med_te - med_tr)))
+    assert res.test_mae == pytest.approx(want, rel=1e-3)
+
+
+def test_predictor_checkpoint_roundtrip(tmp_path, scenario, pcfg):
+    """LengthPredictor params survive checkpointing (serving restarts)."""
+    import jax.numpy as jnp
+    from repro.core import bins as B, targets as T
+    from repro.core.predictor import LengthPredictor, train_predictor
+    from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+
+    edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
+    tgt = T.median_target(jnp.asarray(scenario.len_train, jnp.float32), edges)
+    p = train_predictor(jax.random.PRNGKey(0),
+                        jnp.asarray(scenario.phi_train["last"]), tgt, pcfg,
+                        edges)
+    path = save_checkpoint(str(tmp_path), {"head": p.params, "edges": p.edges})
+    back = restore_checkpoint(path, {"head": p.params, "edges": p.edges})
+    p2 = LengthPredictor(params=back["head"], edges=back["edges"], pcfg=pcfg)
+    phi = jnp.asarray(scenario.phi_test["last"][:32])
+    np.testing.assert_allclose(np.asarray(p.predict(phi)),
+                               np.asarray(p2.predict(phi)), rtol=1e-6)

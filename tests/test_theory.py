@@ -1,0 +1,70 @@
+"""Theorem 1 / Lemma 3 validation on the linear surrogate (paper App. B)."""
+
+import numpy as np
+import pytest
+
+from repro.core import theory as TH
+from repro.data.synthetic import surrogate_linear_data
+
+
+def test_lemma3_median_moment_bound():
+    """E|median_r|^{1+eps} <= 2 E|X|^{1+eps} for symmetric heavy-tailed X."""
+    for eps in (0.3, 0.5, 1.0):
+        df = 1 + 2 * eps
+        base, med = TH.lemma3_moment(
+            lambda rng, shape: rng.standard_t(df, size=shape), r=16, eps=eps,
+            n_trials=40000)
+        assert med <= 2.0 * base * 1.05  # small MC slack
+        assert med < base  # median is strictly better for heavy tails
+
+
+def test_failure_prob_decays_exponentially():
+    N = 1000
+    probs = [TH.failure_prob(N, r) for r in (8, 16, 32, 64, 128)]
+    assert all(a > b for a, b in zip(probs, probs[1:]))
+    r_star = TH.r_required(N, delta=0.05)
+    assert TH.failure_prob(N, r_star) <= 0.05 + 1e-9
+
+
+def test_ridge_closed_form():
+    rng = np.random.default_rng(0)
+    phi = rng.standard_normal((50, 4))
+    y = phi @ np.array([1.0, -2.0, 0.5, 0.0]) + 0.01 * rng.standard_normal(50)
+    fit = TH.ridge_fit(phi, y, lam=1e-6)
+    np.testing.assert_allclose(fit.theta, [1.0, -2.0, 0.5, 0.0], atol=0.02)
+
+
+def test_median_labels_reduce_estimation_error():
+    """The operational content of Thm. 1: median-of-r labels give a smaller
+    ridge estimation error than single-draw labels under heavy-tailed noise."""
+    phi, eta, theta = surrogate_linear_data(n=800, d=8, eps=0.5, v=1.0, r=16,
+                                            seed=1)
+    y_true = phi @ theta
+    fit_single = TH.ridge_fit(phi, y_true + eta[:, 0], lam=1.0)
+    fit_median = TH.ridge_fit(phi, y_true + np.median(eta, axis=1), lam=1.0)
+    err_single = np.linalg.norm(fit_single.theta - theta)
+    err_median = np.linalg.norm(fit_median.theta - theta)
+    assert err_median < err_single
+
+
+def test_theorem1_bound_holds_empirically():
+    """|phi^T theta* - phi^T theta_hat| <= beta_N ||phi||_{V_N^{-1}} with
+    coverage >= 1 - 2 delta when r >= r_required (the bound is loose, so
+    coverage should in fact be ~1)."""
+    N, d, eps, v, S = 600, 6, 0.5, 1.0, 1.0
+    delta = 0.1
+    r = TH.r_required(N, delta)
+    phi, eta, theta = surrogate_linear_data(n=N, d=d, eps=eps, v=v, r=r, seed=2)
+    labels = phi @ theta + np.median(eta[:, :r], axis=1)
+    lam = 1.0
+    fit = TH.ridge_fit(phi, labels, lam=lam)
+    beta = TH.theorem1_beta(N, d, v, eps, delta, lam, S)
+    cov = TH.empirical_coverage(fit, phi, phi @ theta, beta)
+    assert cov >= 1 - 2 * delta
+
+
+def test_beta_grows_sublinearly_in_N():
+    betas = [TH.theorem1_beta(N, 8, 1.0, 0.5, 0.05, 1.0, 1.0)
+             for N in (100, 1000, 10000)]
+    # N^{(1-eps)/(2(1+eps))} = N^{1/6} growth modulo logs: much slower than N
+    assert betas[2] / betas[0] < 100 ** 0.5
