@@ -8,7 +8,10 @@ Pipeline (all real, no stubs):
      hidden states from prefill;
   3. build ProD-D targets and train the head;
   4. serve a fresh batched workload through the continuous-batching engine,
-     comparing FCFS/max-reserve vs ProD-driven SJF + quantile reservation.
+     comparing FCFS/max-reserve vs ProD-driven SJF + quantile reservation;
+  5. replay the same workload across a 2-replica cluster, comparing the
+     load-blind round-robin/max-reserve router against the ProD-aware
+     predicted-shortest-queue router with quantile KV reservation.
 
     PYTHONPATH=src python examples/serve_with_prod.py [--train-steps 300]
 """
@@ -29,6 +32,7 @@ from repro.core.predictor import train_predictor
 from repro.data.pipeline import batch_iterator, make_lm_dataset
 from repro.data.tokenizer import N_TOPICS, ToyTokenizer
 from repro.models.model_zoo import Runtime, build_model
+from repro.serving.cluster import Cluster
 from repro.serving.engine import RealEngine, SimEngine
 from repro.serving.request import Request
 from repro.serving.scheduler import Policy
@@ -51,12 +55,12 @@ def main():
     tcfg = TrainConfig(lr=3e-3, warmup_steps=10, decay_steps=args.train_steps,
                        seed=args.seed)
     ds = make_lm_dataset(2048, 96, seed=args.seed)
-    print(f"[1/4] training tiny-lm for {args.train_steps} steps ...")
+    print(f"[1/5] training tiny-lm for {args.train_steps} steps ...")
     state = train_loop(model, tcfg, batch_iterator(ds, 16, seed=args.seed),
                        args.train_steps, rt=Runtime.local(), log_every=100)
 
     # -- 2. repeated-sampling data collection --------------------------------
-    print(f"[2/4] collecting {args.r} generations x {args.n_prompts} prompts ...")
+    print(f"[2/5] collecting {args.r} generations x {args.n_prompts} prompts ...")
     eng = RealEngine(model, state.params, max_new=args.max_new, temperature=0.8)
     rng = np.random.default_rng(args.seed)
     tok = ToyTokenizer()
@@ -72,7 +76,7 @@ def main():
           f"noise radius={nr:.2f}  ({time.time()-t0:.0f}s)")
 
     # -- 3. train the ProD-D head on REAL hidden states ----------------------
-    print("[3/4] training ProD-D head on the served model's hidden states ...")
+    print("[3/5] training ProD-D head on the served model's hidden states ...")
     pcfg = PredictorConfig(n_bins=24, bin_max=float(lens.max() + 8), epochs=40,
                            batch_size=32)
     edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
@@ -85,7 +89,7 @@ def main():
           f"(noise radius {nr:.2f})")
 
     # -- 4. serve a fresh workload with ProD scheduling ----------------------
-    print(f"[4/4] serving {args.n_serve} batched requests ...")
+    print(f"[4/5] serving {args.n_serve} batched requests ...")
     arrivals = np.cumsum(rng.exponential(1.5, args.n_serve))
     fresh = rng.integers(0, args.n_prompts, args.n_serve)
     reqs = []
@@ -101,7 +105,22 @@ def main():
         print(f"      {st.policy:20s} mean_lat={st.mean_latency:7.1f} "
               f"p90={st.p90_latency:7.1f} waste={st.kv_waste_ratio:.3f} "
               f"thr={st.throughput:.2f}")
-    print("done — ProD scheduling vs FCFS/max-reserve shown above.")
+
+    # -- 5. multi-replica cluster replay with the trained ProD head ----------
+    print("[5/5] replaying across a 2-replica cluster ...")
+    for router, pol in (
+            ("round_robin", Policy("fcfs", "max", max_seq_len=args.max_new)),
+            ("psq", Policy("fcfs", "quantile", quantile=0.9,
+                           max_seq_len=args.max_new))):
+        cl = Cluster(n_replicas=2, max_slots=4,
+                     kv_budget=2 * (6 + args.max_new), policy=pol,
+                     router=router, predictor=pred)
+        st = cl.run(reqs)
+        print(f"      {st.router:12s}+{st.policy:18s} "
+              f"p50={st.p50_latency:7.1f} p99={st.p99_latency:7.1f} "
+              f"waste={st.kv_waste_ratio:.3f} balance={st.balance:.2f}")
+    print("done — ProD scheduling/routing vs prediction-blind baselines "
+          "shown above.")
 
 
 if __name__ == "__main__":

@@ -98,7 +98,11 @@ def resolve_spec(
                 continue
             axis_tuple = ok
         used.update(axis_tuple)
-        out.append(axis_tuple if len(axis_tuple) > 1 else axis_tuple[0])
+        # keep the tuple form whenever the rule mapped to a tuple, even if the
+        # divisibility fallback shrank it to one axis — P(("pod",)) and
+        # P("pod") shard identically but compare unequal, and downstream code
+        # (tests, spec equality against batch_spec) relies on stable form
+        out.append(axis_tuple if isinstance(mapped, tuple) else axis_tuple[0])
     while out and out[-1] is None:
         out.pop()
     return P(*out)

@@ -84,5 +84,19 @@ PAPER_SPLITS = {
 }
 
 
+ALL_SETTINGS: Tuple[Tuple[str, str], ...] = tuple(
+    (m, s) for m in MODELS for s in SCENARIOS
+)
+
+
 def get_spec(model: str, scenario: str) -> ScenarioSpec:
     return _CAL[(model, scenario)]
+
+
+def feature_sigma(spec: ScenarioSpec, view: str = "last") -> float:
+    """Effective log-median observation noise of a probe view for a scenario:
+    the per-view latent noise scaled by scenario feature hardness. This is the
+    σ a trace-level predictor proxy corrupts log m with, so that prediction
+    error tracks the paper's view-informativeness ordering (last > mean >
+    proxy > entropy) and scenario difficulty (chat ≫ math)."""
+    return spec.feature_hardness * VIEW_NOISE[view]

@@ -1,0 +1,196 @@
+"""Open-loop arrival traces for the cluster simulator.
+
+Generates request streams whose decode lengths are drawn from the calibrated
+heavy-tailed prompt-conditioned laws in :mod:`repro.data.scenarios` — any one
+of the eight (served model × scenario) settings, or a traffic mix over all of
+them — under three arrival processes:
+
+* ``poisson``  — homogeneous Poisson (exponential interarrivals);
+* ``bursty``   — 2-state Markov-modulated Poisson (calm/burst), normalized so
+  the long-run mean rate equals ``rate``;
+* ``diurnal``  — sinusoidally modulated rate via thinning,
+  λ(t) = rate·(1 + amp·sin(2πt/period)).
+
+Each request carries φ = its (noise-corrupted) length-law latents, so the
+:class:`LatentOracle` can stand in for a trained ProD head at trace scale:
+its median/quantile predictions are exact functionals of the corrupted
+latents, and the corruption level follows the paper's feature-informativeness
+calibration (``feature_sigma``) — chat traffic is genuinely harder to predict
+than math. True lengths are drawn from the *clean* latents.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.lengths import law_quantile, sample_lengths, sample_prompt_latents
+from repro.data.scenarios import ALL_SETTINGS, feature_sigma, get_spec
+from repro.serving.request import Request
+
+
+@dataclass(frozen=True)
+class TraceConfig:
+    n_requests: int = 50_000
+    pattern: str = "poisson"        # poisson | bursty | diurnal
+    rate: float = 1.0               # mean arrivals per engine step
+    model: str = "mix"              # qwen | llama | mix
+    scenario: str = "mix"           # math | coding | longseq | chat | mix
+    seed: int = 0
+    prompt_min: int = 16
+    prompt_max: int = 256
+    max_seq_len: int = 4096         # decode lengths clipped to the serve cap
+    view: str = "last"              # predictor probe view (feature noise)
+    # bursty (2-state MMPP)
+    burst_rate_mult: float = 6.0
+    burst_len_mean: float = 200.0   # mean steps per burst episode
+    calm_len_mean: float = 1800.0
+    # diurnal
+    diurnal_period: float = 20_000.0
+    diurnal_amp: float = 0.8
+
+    def settings(self) -> Tuple[Tuple[str, str], ...]:
+        if self.model == "mix" and self.scenario == "mix":
+            return ALL_SETTINGS
+        models = ("qwen", "llama") if self.model == "mix" else (self.model,)
+        scens = (("math", "coding", "longseq", "chat")
+                 if self.scenario == "mix" else (self.scenario,))
+        return tuple((m, s) for m in models for s in scens)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+
+def _poisson_arrivals(rng: np.random.Generator, n: int, rate: float) -> np.ndarray:
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def _bursty_arrivals(cfg: TraceConfig, rng: np.random.Generator,
+                     n: int) -> np.ndarray:
+    """2-state MMPP: alternate exponential-length calm/burst episodes; draw
+    the arrivals inside an episode as uniform order statistics of a Poisson
+    count. Base rate is scaled so the long-run mean equals cfg.rate."""
+    p_burst = cfg.burst_len_mean / (cfg.burst_len_mean + cfg.calm_len_mean)
+    mean_mult = (1.0 - p_burst) + p_burst * cfg.burst_rate_mult
+    base = cfg.rate / mean_mult
+    out: List[np.ndarray] = []
+    t, total, burst = 0.0, 0, False
+    while total < n:
+        mean_len = cfg.burst_len_mean if burst else cfg.calm_len_mean
+        dur = float(rng.exponential(mean_len))
+        lam = base * (cfg.burst_rate_mult if burst else 1.0)
+        k = int(rng.poisson(lam * dur))
+        if k:
+            out.append(t + np.sort(rng.random(k)) * dur)
+            total += k
+        t += dur
+        burst = not burst
+    return np.concatenate(out)[:n]
+
+
+def _diurnal_arrivals(cfg: TraceConfig, rng: np.random.Generator,
+                      n: int) -> np.ndarray:
+    """Inhomogeneous Poisson via thinning against λ_max = rate·(1+amp)."""
+    lam_max = cfg.rate * (1.0 + cfg.diurnal_amp)
+    kept: List[np.ndarray] = []
+    t, total = 0.0, 0
+    while total < n:
+        chunk = max(1024, 2 * (n - total))
+        cand = t + np.cumsum(rng.exponential(1.0 / lam_max, size=chunk))
+        lam_t = cfg.rate * (1.0 + cfg.diurnal_amp
+                            * np.sin(2.0 * np.pi * cand / cfg.diurnal_period))
+        keep = cand[rng.random(chunk) < lam_t / lam_max]
+        kept.append(keep)
+        total += len(keep)
+        t = float(cand[-1])
+    return np.concatenate(kept)[:n]
+
+
+def arrival_times(cfg: TraceConfig, rng: np.random.Generator) -> np.ndarray:
+    n = cfg.n_requests
+    if n <= 0:
+        return np.zeros(0, np.float64)
+    if cfg.pattern == "poisson":
+        return _poisson_arrivals(rng, n, cfg.rate)
+    if cfg.pattern == "bursty":
+        return _bursty_arrivals(cfg, rng, n)
+    if cfg.pattern == "diurnal":
+        return _diurnal_arrivals(cfg, rng, n)
+    raise ValueError(cfg.pattern)
+
+
+# ---------------------------------------------------------------------------
+# trace construction
+# ---------------------------------------------------------------------------
+
+
+def make_trace(cfg: TraceConfig) -> List[Request]:
+    """Build an open-loop request trace: Poisson/bursty/diurnal arrivals with
+    heavy-tailed prompt-conditioned lengths from the calibrated scenario laws.
+
+    Deterministic for a fixed config (single seeded Generator). Requests come
+    back sorted by arrival with φ = noise-corrupted latents attached."""
+    rng = np.random.default_rng(cfg.seed)
+    n = cfg.n_requests
+    arrivals = arrival_times(cfg, rng)
+    settings = cfg.settings()
+    pick = rng.integers(0, len(settings), size=n)
+
+    true_len = np.zeros(n, np.int64)
+    phi = np.zeros((n, 4), np.float64)
+    for si, (model, scen) in enumerate(settings):
+        idx = np.nonzero(pick == si)[0]
+        if len(idx) == 0:
+            continue
+        spec = get_spec(model, scen)
+        lat = sample_prompt_latents(rng, spec.law, len(idx))
+        true_len[idx] = sample_lengths(rng, lat, 1, spec.law)[:, 0]
+        noisy = lat.copy()
+        noisy[:, 0] += feature_sigma(spec, cfg.view) * rng.standard_normal(
+            len(idx))
+        phi[idx] = noisy
+    true_len = np.minimum(true_len, cfg.max_seq_len)
+    plen = rng.integers(cfg.prompt_min, cfg.prompt_max, size=n)
+
+    reqs = [
+        Request(
+            rid=i, arrival=float(arrivals[i]), prompt_len=int(plen[i]),
+            true_len=int(true_len[i]), phi=phi[i],
+            setting="/".join(settings[pick[i]]),
+        )
+        for i in range(n)
+    ]
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
+class LatentOracle:
+    """Trace-scale ProD-predictor proxy: predicts from each request's
+    (noise-corrupted) length-law latents instead of a trained head.
+
+    ``predict`` returns the body median exp(log m̃) — the ProD-M point
+    estimate — and ``quantile`` inverts the full body+tail mixture CDF at the
+    corrupted latents — the ProD-D distributional estimate. Because log m̃
+    carries ``feature_sigma``-scaled noise, prediction quality degrades
+    exactly where the paper says features are least informative."""
+
+    def predict(self, phi: np.ndarray) -> np.ndarray:
+        return np.exp(np.asarray(phi, np.float64)[:, 0])
+
+    def quantile(self, phi: np.ndarray, q: float) -> np.ndarray:
+        return law_quantile(np.asarray(phi, np.float64), q)
+
+
+def mean_true_length(reqs: Sequence[Request]) -> float:
+    return float(np.mean([r.true_len for r in reqs]))
+
+
+def stable_rate(n_replicas: int, max_slots: int, mean_len: float,
+                load: float = 0.7) -> float:
+    """Arrival rate giving the cluster utilization ``load``: each slot emits
+    one token per step, so capacity is n_replicas·max_slots/mean_len req/step."""
+    return load * n_replicas * max_slots / max(mean_len, 1.0)

@@ -6,6 +6,14 @@
   fixed-shape batching model). Used to quantify what better length prediction
   buys in throughput/latency/memory.
 
+  The engine is *stepwise*: :meth:`submit` enqueues requests, :meth:`step`
+  advances one decode tick, so a :class:`~repro.serving.cluster.Cluster` can
+  drive N replicas in lockstep against a shared clock. :meth:`run` wraps the
+  closed-loop single-replica flow. The per-tick decode comes in two
+  implementations — a per-slot reference loop and a vectorized NumPy fast
+  path over the slot arrays (default) — that produce bit-identical results;
+  the fast path is what lets a 50k-request trace replay in seconds.
+
 * :class:`RealEngine` — Track B: actually decodes a tiny JAX LM with
   temperature sampling, slot-based batching, real KV caches, and the fused
   ProD head on real last-token hidden states.
@@ -13,6 +21,7 @@
 
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -20,7 +29,7 @@ import numpy as np
 
 from repro.serving.kvcache import KVCacheManager
 from repro.serving.request import Request
-from repro.serving.scheduler import (Policy, annotate_predictions, pick_next,
+from repro.serving.scheduler import (Policy, annotate_predictions,
                                      predicted_remaining)
 
 
@@ -29,7 +38,9 @@ class ServeStats:
     policy: str
     makespan: float
     mean_latency: float
+    p50_latency: float
     p90_latency: float
+    p99_latency: float
     mean_wait: float
     throughput: float              # completed tokens / step
     kv_waste_ratio: float
@@ -37,95 +48,365 @@ class ServeStats:
     peak_reserved: int
     completed: int
     preemptions: int = 0
+    oom_evictions: int = 0
+    dropped: int = 0               # unservable: need exceeds the whole pool
 
     def row(self) -> dict:
         return self.__dict__.copy()
 
 
+def _latency_stats(done: List[Request]) -> dict:
+    lat = np.array([r.latency for r in done])
+    waits = np.array([r.wait for r in done])
+    if len(lat) == 0:
+        inf = float("inf")
+        return dict(mean_latency=inf, p50_latency=inf, p90_latency=inf,
+                    p99_latency=inf, mean_wait=inf)
+    return dict(
+        mean_latency=float(lat.mean()),
+        p50_latency=float(np.quantile(lat, 0.5)),
+        p90_latency=float(np.quantile(lat, 0.9)),
+        p99_latency=float(np.quantile(lat, 0.99)),
+        mean_wait=float(waits.mean()),
+    )
+
+
 class SimEngine:
-    """Discrete-event continuous-batching simulator."""
+    """Discrete-event continuous-batching simulator (one replica).
+
+    Scheduling semantics per :meth:`step`:
+
+    1. *admit*: pop ready requests in policy order while a slot and KV
+       reservation budget are available (head-of-line blocks on memory);
+    2. *preempt* (SRTF policies): the ready request with the shortest
+       predicted remaining length evicts the longest-remaining active slot
+       when the gap exceeds ``preempt_factor`` (progress is kept);
+    3. *decode*: every active slot emits one token. A slot that would outgrow
+       its reservation first grows it by max(25%, 16 tokens); if the budget
+       refuses, the slot stalls this tick (no token) and retries next tick.
+    """
 
     def __init__(self, max_slots: int, kv_budget: int, policy: Policy,
-                 predictor=None):
+                 predictor=None, vectorized: bool = True):
         self.max_slots = max_slots
         self.policy = policy
         self.predictor = predictor
-        self.kv = KVCacheManager(budget_tokens=kv_budget)
+        self.vectorized = vectorized
+        self._kv_budget = kv_budget
+        self.reset()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def reset(self):
+        self.kv = KVCacheManager(budget_tokens=self._kv_budget)
+        self.t = 0.0
+        self.preemptions = 0
+        self.oom_evictions = 0
+        self.dropped = 0
+        self._progress = True       # did the last decode tick emit any token?
+        self._seq = 0                       # heap tie-break, FIFO among ties
+        self._future: list = []             # (arrival, seq, Request)
+        self._ready: list = []              # (policy key, seq, Request)
+        self._ready_need = 0                # Σ queued reservation needs
+        self._ready_pred = 0.0              # Σ queued predicted remaining
+        self._slots: List[Request] = []     # active, admission order
+        self._n_active = 0
+        m = self.max_slots
+        self._a_gen = np.zeros(m, np.int64)
+        self._a_used = np.zeros(m, np.int64)
+        self._a_res = np.zeros(m, np.int64)
+        self._a_plen = np.zeros(m, np.int64)
+        self._a_tlen = np.zeros(m, np.int64)
+        self._a_pred = np.zeros(m, np.float64)
+        self._used_sum = 0
+        self._done: List[Request] = []
+
+    # -- queue ---------------------------------------------------------------
+
+    def _order_key(self, r: Request) -> float:
+        o = self.policy.order
+        if o == "fcfs":
+            return float(r.arrival)
+        if o in ("sjf_pred", "srtf_pred"):
+            return predicted_remaining(r)
+        if o == "sjf_oracle":
+            return float(r.true_len)
+        raise ValueError(o)
+
+    def _push_ready(self, r: Request):
+        self._seq += 1
+        heapq.heappush(self._ready, (self._order_key(r), self._seq, r))
+        self._ready_need += int(r.prompt_len + r.reserve_len)
+        self._ready_pred += predicted_remaining(r)
+
+    def submit(self, requests: List[Request]):
+        """Enqueue requests (already annotated with predictions/reservations).
+        Requests with a future arrival wait in the arrival heap."""
+        for r in requests:
+            if r.arrival > self.t:
+                self._seq += 1
+                heapq.heappush(self._future, (float(r.arrival), self._seq, r))
+            else:
+                self._push_ready(r)
+
+    @property
+    def idle(self) -> bool:
+        return not (self._n_active or self._ready or self._future)
+
+    @property
+    def done(self) -> List[Request]:
+        return self._done
+
+    # -- router signals (cluster dispatch) -----------------------------------
+
+    @property
+    def outstanding_requests(self) -> int:
+        return self._n_active + len(self._ready)
+
+    @property
+    def outstanding_kv(self) -> int:
+        """Reserved KV of active slots + reservation needs of the queue."""
+        return self.kv.reserved_now + self._ready_need
+
+    def predicted_backlog(self) -> float:
+        """Predicted remaining decode tokens across active + queued requests
+        (the ProD signal a predicted-shortest-queue router dispatches on)."""
+        n = self._n_active
+        act = float(np.maximum(self._a_pred[:n] - self._a_gen[:n], 1.0).sum())
+        return act + self._ready_pred
+
+    # -- one engine tick -----------------------------------------------------
+
+    def _admit(self):
+        while self._future and self._future[0][0] <= self.t:
+            _, _, r = heapq.heappop(self._future)
+            self._push_ready(r)
+        while self._n_active < self.max_slots and self._ready:
+            _, _, cand = self._ready[0]
+            need = int(cand.prompt_len + cand.reserve_len)
+            if not self.kv.admit(cand.rid, need):
+                break  # KV-bound: head-of-line blocks on memory
+            heapq.heappop(self._ready)
+            self._ready_need -= need
+            self._ready_pred -= predicted_remaining(cand)
+            if cand.t_start is None:
+                cand.t_start = self.t
+            i = self._n_active
+            self._slots.append(cand)
+            self._a_gen[i] = cand.generated      # preempted resume w/ progress
+            self._a_used[i] = cand.prompt_len + cand.generated
+            self._a_res[i] = need
+            self._a_plen[i] = cand.prompt_len
+            self._a_tlen[i] = cand.true_len
+            self._a_pred[i] = (cand.predicted_len
+                               if cand.predicted_len is not None
+                               else float(cand.true_len))
+            self._used_sum += int(self._a_used[i])
+            self._n_active += 1
+
+    def _maybe_preempt(self):
+        # SRTF preemption: a waiting request with much shorter predicted
+        # remaining evicts the longest-remaining active one (ProD-O's
+        # remaining-length signal makes this decision possible)
+        if not (self.policy.preempt and self._n_active and self._ready):
+            return
+        newcomer = self._ready[0][2]
+        n = self._n_active
+        rem = np.maximum(self._a_pred[:n] - self._a_gen[:n], 1.0)
+        v = int(np.argmax(rem))
+        if rem[v] > self.policy.preempt_factor * predicted_remaining(newcomer):
+            victim = self._slots[v]
+            victim.generated = int(self._a_gen[v])
+            self.kv.release(victim.rid)
+            self._used_sum -= int(self._a_used[v])
+            self._drop_slot(v)
+            self._push_ready(victim)   # resumes later with progress kept
+            self.preemptions += 1
+
+    def _drop_slot(self, i: int):
+        """Remove slot i, keeping admission order (stable left shift)."""
+        n = self._n_active
+        self._slots.pop(i)
+        for a in (self._a_gen, self._a_used, self._a_res, self._a_plen,
+                  self._a_tlen, self._a_pred):
+            a[i:n - 1] = a[i + 1:n]
+        self._n_active = n - 1
+
+    def _finish_slot(self, i: int):
+        r = self._slots[i]
+        r.t_finish = self.t
+        r.generated = int(self._a_gen[i])
+        self.kv.release(r.rid)
+        self._used_sum -= int(self._a_used[i])
+        self._drop_slot(i)
+        self._done.append(r)
+
+    def _decode_tick_ref(self):
+        """Reference per-slot decode loop (exact sequential semantics)."""
+        self._progress = False
+        i = 0
+        while i < self._n_active:
+            r = self._slots[i]
+            res = int(self._a_res[i])
+            if self._a_plen[i] + self._a_gen[i] + 1 > res:
+                # outgrew reservation: grow or stall (overflow penalty)
+                if not self.kv.grow(r.rid, max(int(0.25 * res), 16)):
+                    i += 1
+                    continue  # stalled this tick, retries next tick
+                self._a_res[i] = self.kv.reserved[r.rid]
+                r.overflows += 1
+            self._a_gen[i] += 1
+            self._a_used[i] += 1
+            self._used_sum += 1
+            self._progress = True
+            if self._a_gen[i] >= self._a_tlen[i]:
+                self._finish_slot(i)
+            else:
+                i += 1
+        if self._n_active and not self._progress:
+            self._evict_stalled()
+
+    def _evict_stalled(self):
+        """KV deadlock breaker: every active slot is stalled on a reservation
+        grow the budget cannot satisfy, and (with no completions pending) no
+        waiting can change that. Preempt the most recently admitted slot
+        (vLLM-style recompute preemption, progress kept) so the freed tokens
+        let the remaining slots grow. The victim's reservation ask is bumped
+        past its current progress so its re-admission can emit tokens —
+        clamped to the pool size so the request stays admittable. A victim
+        whose clamped ask buys no headroom needs more KV than the whole pool
+        holds: it can never finish under any policy, so it is dropped."""
+        v = self._n_active - 1
+        victim = self._slots[v]
+        victim.generated = int(self._a_gen[v])
+        ask = max(victim.reserve_len * 1.25, victim.generated + 16.0)
+        ask = min(ask, float(self.kv.budget_tokens - victim.prompt_len))
+        self.kv.release(victim.rid)
+        self._used_sum -= int(self._a_used[v])
+        self._drop_slot(v)
+        self.oom_evictions += 1
+        if int(victim.prompt_len + ask) <= victim.prompt_len + victim.generated:
+            self.dropped += 1      # unservable: exceeds the entire KV pool
+            return
+        victim.reserve_len = float(ask)
+        self._push_ready(victim)
+
+    def _decode_tick_vec(self):
+        """Vectorized decode over all active slots. Falls back to the
+        reference loop on ticks with reservation growth (rare), where budget
+        interactions are inherently sequential — keeping both paths exact."""
+        n = self._n_active
+        if n == 0:
+            return
+        if bool(np.any(self._a_plen[:n] + self._a_gen[:n] + 1
+                       > self._a_res[:n])):
+            self._decode_tick_ref()
+            return
+        self._progress = True
+        self._a_gen[:n] += 1
+        self._a_used[:n] += 1
+        self._used_sum += n
+        finished = self._a_gen[:n] >= self._a_tlen[:n]
+        if bool(finished.any()):
+            for off, i in enumerate(np.nonzero(finished)[0]):
+                self._finish_slot(int(i) - off)
+
+    def step(self):
+        """One engine tick: admit → (preempt) → decode one token per slot."""
+        if (self._n_active == 0 and not self._ready
+                and (not self._future or self._future[0][0] > self.t)):
+            self.t += 1.0   # fully idle tick: nothing to admit or decode
+            return
+        self._admit()
+        self._maybe_preempt()
+        self.t += 1.0
+        if self.vectorized:
+            self._decode_tick_vec()
+        else:
+            self._decode_tick_ref()
+        # reservation/usage integrals (waste metric), kept on the KV manager
+        self.kv.total_reserved_steps += self.kv.reserved_now
+        self.kv.total_used_steps += self._used_sum
+
+    def advance_to(self, t: float):
+        """Idle-skip the clock (no decode work in between)."""
+        self.t = max(self.t, t)
+
+    # -- event leap (vectorized fast path) -----------------------------------
+
+    def ticks_to_event(self) -> float:
+        """Ticks until the next tick that can admit, preempt, grow, complete,
+        or see an arrival become due. Every tick strictly before that is
+        provably eventless: active slots just emit one token each, so the
+        whole span can be advanced in closed form by :meth:`leap`."""
+        k = np.inf
+        if self._future:
+            # arrival due at the tick whose start time ≥ arrival
+            k = min(k, max(1.0, np.ceil(self._future[0][0] - self.t) + 1.0))
+        if self._ready:
+            cand = self._ready[0][2]
+            if (self._n_active < self.max_slots
+                    and self.kv.can_admit(int(cand.prompt_len
+                                              + cand.reserve_len))):
+                return 1.0   # admission fires next tick
+            if self.policy.preempt and self._n_active:
+                n = self._n_active
+                rem = np.maximum(self._a_pred[:n] - self._a_gen[:n], 1.0)
+                if (rem.max() > self.policy.preempt_factor
+                        * predicted_remaining(cand)):
+                    return 1.0   # preemption fires next tick (monotone ↓)
+        n = self._n_active
+        if n:
+            k = min(k, float((self._a_tlen[:n] - self._a_gen[:n]).min()))
+            k = min(k, float((self._a_res[:n] - self._a_plen[:n]
+                              - self._a_gen[:n]).min() + 1))
+        return max(k, 1.0)
+
+    def leap(self, q: int):
+        """Advance q provably-eventless ticks at once — bit-identical to q
+        calls of :meth:`step` (each active slot emits one token per tick; the
+        usage integral is the arithmetic series the per-tick loop would sum)."""
+        if q <= 0:
+            return
+        n = self._n_active
+        self._a_gen[:n] += q
+        self._a_used[:n] += q
+        self.kv.total_used_steps += q * self._used_sum + n * q * (q + 1) // 2
+        self.kv.total_reserved_steps += q * self.kv.reserved_now
+        self._used_sum += n * q
+        self.t += float(q)
+
+    # -- closed-loop convenience --------------------------------------------
 
     def run(self, requests: List[Request], max_steps: int = 1_000_000) -> ServeStats:
+        self.reset()
         reqs = [Request(**{**r.__dict__}) for r in requests]  # defensive copy
         annotate_predictions(reqs, self.predictor, self.policy)
-        queue: List[Request] = sorted(reqs, key=lambda r: r.arrival)
-        active: List[Request] = []
-        done: List[Request] = []
-        t = 0.0
-        preemptions = 0
-        while (queue or active) and t < max_steps:
-            # admit while there is a slot + KV budget
-            while len(active) < self.max_slots:
-                i = pick_next(queue, self.policy, t)
-                if i is None:
-                    break
-                cand = queue[i]
-                need = int(cand.prompt_len + cand.reserve_len)
-                if not self.kv.admit(cand.rid, need):
-                    break  # KV-bound: head-of-line blocks on memory
-                queue.pop(i)
-                if cand.t_start is None:
-                    cand.t_start = t
-                self.kv.use(cand.rid, cand.prompt_len + cand.generated)
-                active.append(cand)
-            # SRTF preemption: a waiting request with much shorter predicted
-            # remaining evicts the longest-remaining active one (ProD-O's
-            # remaining-length signal makes this decision possible)
-            if self.policy.preempt and active:
-                i = pick_next(queue, self.policy, t)
-                if i is not None:
-                    newcomer = queue[i]
-                    victim = max(active, key=predicted_remaining)
-                    if (predicted_remaining(victim)
-                            > self.policy.preempt_factor
-                            * predicted_remaining(newcomer)):
-                        active.remove(victim)
-                        self.kv.release(victim.rid)
-                        queue.append(victim)   # resumes later with progress kept
-                        preemptions += 1
-            # one decode step for all active slots
-            t += 1.0
-            for r in list(active):
-                r.generated += 1
-                self.kv.use(r.rid, 1)
-                used = r.prompt_len + r.generated
-                if used > int(r.prompt_len + r.reserve_len):
-                    # outgrew reservation: grow or stall (overflow penalty)
-                    if not self.kv.grow(r.rid, max(int(0.25 * r.reserve_len), 16)):
-                        continue  # stalled this step, retries next step
-                    r.overflows += 1
-                    r.reserve_len *= 1.25
-                if r.generated >= r.true_len:
-                    r.t_finish = t
-                    self.kv.release(r.rid)
-                    active.remove(r)
-                    done.append(r)
-            self.kv.tick()
-            if not active and queue:
-                nxt = min(q.arrival for q in queue)
-                t = max(t, float(np.floor(nxt)))
-        lat = np.array([r.latency for r in done])
-        waits = np.array([r.wait for r in done])
-        toks = sum(r.true_len for r in done)
+        self.submit(reqs)
+        while not self.idle and self.t < max_steps:
+            if self.vectorized:
+                q = int(min(self.ticks_to_event() - 1,
+                            max(max_steps - self.t - 1, 0)))
+                self.leap(q)
+            self.step()
+            if self._n_active == 0 and not self._ready and self._future:
+                self.advance_to(float(np.floor(self._future[0][0])))
+        return self.stats()
+
+    def stats(self) -> ServeStats:
+        toks = sum(r.true_len for r in self._done)
         return ServeStats(
             policy=f"{self.policy.order}+{self.policy.reserve}",
-            makespan=t,
-            mean_latency=float(lat.mean()) if len(lat) else float("inf"),
-            p90_latency=float(np.quantile(lat, 0.9)) if len(lat) else float("inf"),
-            mean_wait=float(waits.mean()) if len(waits) else float("inf"),
-            throughput=toks / max(t, 1.0),
+            makespan=self.t,
+            throughput=toks / max(self.t, 1.0),
             kv_waste_ratio=self.kv.waste_ratio,
             overflow_events=self.kv.overflow_events,
             peak_reserved=self.kv.peak_reserved,
-            completed=len(done),
-            preemptions=preemptions,
+            completed=len(self._done),
+            preemptions=self.preemptions,
+            oom_evictions=self.oom_evictions,
+            dropped=self.dropped,
+            **_latency_stats(self._done),
         )
 
 

@@ -17,14 +17,11 @@ class KVCacheManager:
     budget_tokens: int                       # total KV slots across the pool
     reserved: Dict[int, int] = field(default_factory=dict)
     used: Dict[int, int] = field(default_factory=dict)
+    reserved_now: int = 0                    # Σ reserved, kept incrementally
     peak_reserved: int = 0
     overflow_events: int = 0
     total_reserved_steps: float = 0.0        # token-steps of reservation
     total_used_steps: float = 0.0
-
-    @property
-    def reserved_now(self) -> int:
-        return sum(self.reserved.values())
 
     def can_admit(self, n_tokens: int) -> bool:
         return self.reserved_now + n_tokens <= self.budget_tokens
@@ -34,6 +31,7 @@ class KVCacheManager:
             return False
         self.reserved[rid] = n_tokens
         self.used[rid] = 0
+        self.reserved_now += n_tokens
         self.peak_reserved = max(self.peak_reserved, self.reserved_now)
         return True
 
@@ -42,6 +40,7 @@ class KVCacheManager:
         if self.reserved_now + extra > self.budget_tokens:
             return False
         self.reserved[rid] += extra
+        self.reserved_now += extra
         self.overflow_events += 1
         self.peak_reserved = max(self.peak_reserved, self.reserved_now)
         return True
@@ -55,7 +54,7 @@ class KVCacheManager:
         self.total_used_steps += sum(self.used.values())
 
     def release(self, rid: int):
-        self.reserved.pop(rid, None)
+        self.reserved_now -= self.reserved.pop(rid, 0)
         self.used.pop(rid, None)
 
     @property

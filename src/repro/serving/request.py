@@ -17,6 +17,9 @@ class Request:
     phi: Optional[np.ndarray] = None    # served-LLM hidden state (predictor input)
     predicted_len: Optional[float] = None
     reserve_len: Optional[float] = None
+    # trace provenance (cluster simulator)
+    setting: Optional[str] = None       # "model/scenario" the law came from
+    replica: Optional[int] = None       # router-assigned replica index
     # engine bookkeeping
     t_start: Optional[float] = None
     t_finish: Optional[float] = None

@@ -38,26 +38,39 @@ def predicted_remaining(r: Request) -> float:
 
 
 def annotate_predictions(requests: List[Request], predictor, policy: Policy):
-    """Attach predicted median + reservation length from the ProD head."""
+    """Attach predicted median + reservation length from the ProD head.
+
+    ``predictor`` is anything with ``predict(phi) -> median`` and
+    ``quantile(phi, q)`` over stacked per-request features — the trained
+    :class:`~repro.core.predictor.LengthPredictor` or the trace-level
+    :class:`~repro.serving.arrivals.LatentOracle`. Without a predictor,
+    requests pre-annotated by a trace generator keep their predictions;
+    anything else falls back to max/oracle reservation."""
+    if not requests:
+        return
     if predictor is None:
         for r in requests:
-            r.predicted_len = None
-            r.reserve_len = float(policy.max_seq_len)
             if policy.reserve == "oracle":
                 r.reserve_len = float(r.true_len)
+            elif (policy.reserve in ("quantile", "predicted")
+                  and r.reserve_len is not None):
+                # pre-annotated trace (cluster path): clamp, keep
+                r.reserve_len = float(
+                    min(max(r.reserve_len, 8.0), policy.max_seq_len))
+            else:
+                r.reserve_len = float(policy.max_seq_len)
         return
-    import jax.numpy as jnp
 
-    phi = jnp.asarray(np.stack([r.phi for r in requests]))
-    med = np.asarray(predictor.predict(phi))
+    phi = np.stack([np.asarray(r.phi) for r in requests])
+    med = np.asarray(predictor.predict(phi), np.float64)
     if policy.reserve == "quantile":
-        res = np.asarray(predictor.quantile(phi, policy.quantile))
+        res = np.asarray(predictor.quantile(phi, policy.quantile), np.float64)
     elif policy.reserve == "predicted":
         res = med * policy.margin
     elif policy.reserve == "oracle":
-        res = np.array([r.true_len for r in requests], np.float32)
+        res = np.array([r.true_len for r in requests], np.float64)
     else:
-        res = np.full(len(requests), policy.max_seq_len, np.float32)
+        res = np.full(len(requests), policy.max_seq_len, np.float64)
     for r, m, rv in zip(requests, med, res):
         r.predicted_len = float(m)
         r.reserve_len = float(min(max(rv, 8.0), policy.max_seq_len))

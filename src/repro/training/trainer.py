@@ -54,18 +54,30 @@ def make_train_step(
             mb = B // n_micro
 
             def micro(i, acc):
-                g_acc, l_acc = acc
+                g_acc, l_acc, w_acc = acc
                 sub = {k: jax.lax.dynamic_slice_in_dim(v, i * mb, mb, 0)
                        for k, v in batch.items()}
+                # microbatches with a loss_mask carry different numbers of
+                # supervised tokens; the per-microbatch loss is a *mean* over
+                # those tokens, so equal-weight accumulation diverges from the
+                # full-batch loss. Weight by supervised-token count (the [1:]
+                # shift matches lm_loss's next-token targets) to make
+                # mean-of-means equal the global mean, for loss AND grads.
+                if "loss_mask" in sub:
+                    w = jnp.maximum(
+                        jnp.sum(sub["loss_mask"][:, 1:].astype(jnp.float32)), 1.0)
+                else:
+                    w = jnp.asarray(float(mb), jnp.float32)
                 (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, sub)
-                g_acc = jax.tree_util.tree_map(lambda a, b: a + b, g_acc, g)
-                return (g_acc, l_acc + l)
+                g_acc = jax.tree_util.tree_map(lambda a, b: a + w * b, g_acc, g)
+                return (g_acc, l_acc + w * l, w_acc + w)
 
             g0 = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            grads, loss = jax.lax.fori_loop(0, n_micro, micro, (g0, 0.0))
-            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
-            loss = loss / n_micro
+            grads, loss, wsum = jax.lax.fori_loop(
+                0, n_micro, micro, (g0, 0.0, 0.0))
+            grads = jax.tree_util.tree_map(lambda g: g / wsum, grads)
+            loss = loss / wsum
             metrics = {}
         else:
             (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(

@@ -1,0 +1,106 @@
+"""Optional-import shim for ``hypothesis``.
+
+When hypothesis is installed, re-export the real ``given``/``settings``/
+``strategies``. When it is absent (the CPU CI image does not ship it), fall
+back to a seeded-random example sweep: ``@given`` draws ``max_examples``
+pseudo-random examples from lightweight strategy stand-ins, with the seed
+derived from the test name so every run replays the same examples. Property
+tests then still collect and exercise a meaningful input sweep either way.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import zlib
+
+try:  # pragma: no cover - depends on the environment
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw function over a seeded numpy Generator."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.draw(rng)
+                for _ in range(int(rng.integers(min_size, max_size + 1)))
+            ])
+
+    class settings:  # noqa: N801 - mimics the hypothesis class name
+        _profiles: dict = {}
+        _active: dict = {}
+
+        def __init__(self, parent=None, **kwargs):
+            self.kwargs = kwargs
+
+        def __call__(self, fn):
+            fn._compat_settings = {**type(self)._active, **self.kwargs}
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, parent=None, **kwargs):
+            cls._profiles[name] = kwargs
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._active = dict(cls._profiles.get(name, {}))
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            def wrapper(*args, **kwargs):
+                conf = {**settings._active,
+                        **getattr(wrapper, "_compat_settings", {})}
+                n = conf.get("max_examples") or 20
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in arg_strategies]
+                    drawn_kw = {k: s.draw(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+
+            # NOT functools.wraps: copying __wrapped__ would expose the
+            # original signature and make pytest treat the drawn arguments
+            # as fixtures. The wrapper must look 0-ary (plus self).
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return decorate

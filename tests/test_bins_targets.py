@@ -4,12 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import bins as B
 from repro.core import targets as T
 
-settings.register_profile("ci", deadline=None, max_examples=40)
+settings.register_profile("ci", deadline=None, max_examples=16)
 settings.load_profile("ci")
 
 

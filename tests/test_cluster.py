@@ -1,0 +1,291 @@
+"""Cluster simulator: arrival traces, router/engine invariants, and the
+vectorized-vs-reference SimEngine regression."""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.data.lengths import LengthLaw, law_quantile, sample_lengths
+from repro.serving.arrivals import (LatentOracle, TraceConfig, arrival_times,
+                                    make_trace)
+from repro.serving.cluster import Cluster, ROUTERS
+from repro.serving.engine import SimEngine
+from repro.serving.scheduler import Policy
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+def _trace(n=300, pattern="poisson", rate=1.0, seed=0, **kw):
+    kw.setdefault("max_seq_len", 512)
+    kw.setdefault("model", "llama")
+    kw.setdefault("scenario", "math")
+    return make_trace(TraceConfig(n_requests=n, pattern=pattern, rate=rate,
+                                  seed=seed, **kw))
+
+
+QPOL = Policy("fcfs", "quantile", quantile=0.9, max_seq_len=512)
+
+
+class TestArrivals:
+    def test_trace_deterministic(self):
+        a = _trace(200, seed=5)
+        b = _trace(200, seed=5)
+        assert [(r.rid, r.arrival, r.prompt_len, r.true_len) for r in a] == \
+               [(r.rid, r.arrival, r.prompt_len, r.true_len) for r in b]
+        np.testing.assert_array_equal(np.stack([r.phi for r in a]),
+                                      np.stack([r.phi for r in b]))
+
+    def test_mix_covers_all_eight_settings(self):
+        reqs = _trace(2000, model="mix", scenario="mix")
+        assert len({r.setting for r in reqs}) == 8
+
+    def test_lengths_heavy_tailed(self):
+        reqs = _trace(2000, model="qwen", scenario="chat", max_seq_len=1 << 16)
+        L = np.array([r.true_len for r in reqs])
+        assert L.max() / np.median(L) > 4.0  # paper: multi-x tail draws
+
+    def test_bursty_more_variable_than_poisson(self):
+        cfg_p = TraceConfig(n_requests=4000, pattern="poisson", rate=1.0)
+        cfg_b = TraceConfig(n_requests=4000, pattern="bursty", rate=1.0)
+        rng = np.random.default_rng(0)
+        gaps_p = np.diff(arrival_times(cfg_p, rng))
+        gaps_b = np.diff(arrival_times(cfg_b, np.random.default_rng(0)))
+        cv = lambda x: x.std() / x.mean()
+        assert cv(gaps_b) > 1.5 * cv(gaps_p)
+
+    def test_diurnal_modulates_rate(self):
+        cfg = TraceConfig(n_requests=6000, pattern="diurnal", rate=1.0,
+                          diurnal_period=4000.0, diurnal_amp=0.8)
+        ts = arrival_times(cfg, np.random.default_rng(0))
+        phase = np.mod(ts, cfg.diurnal_period) / cfg.diurnal_period
+        peak = np.sum((phase > 0.05) & (phase < 0.45))    # sin > 0 half
+        trough = np.sum((phase > 0.55) & (phase < 0.95))  # sin < 0 half
+        assert peak > 1.5 * trough
+
+    def test_mean_rate_preserved_by_patterns(self):
+        for pattern in ("poisson", "bursty", "diurnal"):
+            # short diurnal period so the trace spans many full cycles (the
+            # rate is only mean-preserving over whole periods)
+            cfg = TraceConfig(n_requests=20_000, pattern=pattern, rate=2.0,
+                              diurnal_period=500.0)
+            ts = arrival_times(cfg, np.random.default_rng(1))
+            rate = len(ts) / ts[-1]
+            assert rate == pytest.approx(2.0, rel=0.25), pattern
+
+
+class TestLatentOracle:
+    def test_quantiles_monotone_and_above_median(self):
+        reqs = _trace(500, model="qwen", scenario="longseq")
+        phi = np.stack([r.phi for r in reqs])
+        o = LatentOracle()
+        q50, q90, q99 = (o.quantile(phi, q) for q in (0.5, 0.9, 0.99))
+        assert np.all(q50 <= q90 + 1e-6) and np.all(q90 <= q99 + 1e-6)
+        med = o.predict(phi)
+        assert np.mean(q90 > med) > 0.95  # body+tail q90 sits above median
+
+    def test_law_quantile_matches_empirical(self):
+        law = LengthLaw(median_scale=200, median_spread=0.5, sigma_body=0.15,
+                        tail_weight=0.05, tail_alpha=2.5)
+        lat = np.array([[np.log(200.0), 0.15, 0.05, 2.5]])
+        rng = np.random.default_rng(0)
+        draws = sample_lengths(rng, lat, 200_000, law)[0]
+        for q in (0.5, 0.9, 0.99):
+            got = float(law_quantile(lat, q)[0])
+            want = float(np.quantile(draws, q))
+            assert got == pytest.approx(want, rel=0.05), q
+
+
+def _row_and_finishes(engine_or_cluster, reqs):
+    stv = engine_or_cluster.run(reqs)
+    if hasattr(engine_or_cluster, "engines"):
+        done = [r for e in engine_or_cluster.engines for r in e.done]
+    else:
+        done = engine_or_cluster.done
+    return stv.row(), sorted((r.rid, r.t_start, r.t_finish) for r in done)
+
+
+class TestVectorizedRegression:
+    @pytest.mark.parametrize("pol", [
+        Policy("fcfs", "max", max_seq_len=512),
+        Policy("fcfs", "quantile", quantile=0.9, max_seq_len=512),
+        Policy("sjf_pred", "predicted", margin=1.1, max_seq_len=512),
+        Policy("srtf_pred", "quantile", quantile=0.9, max_seq_len=512,
+               preempt=True),
+    ])
+    def test_engine_vec_matches_ref(self, pol):
+        """The NumPy fast path (incl. event leap) must reproduce the per-slot
+        reference decode bit-for-bit: same stats, same per-request timings."""
+        reqs = _trace(150, pattern="bursty", rate=0.8, seed=7)
+        oracle = LatentOracle()
+        kv = 3 * (256 + 512)
+        ra, fa = _row_and_finishes(
+            SimEngine(6, kv, pol, predictor=oracle, vectorized=True), reqs)
+        rb, fb = _row_and_finishes(
+            SimEngine(6, kv, pol, predictor=oracle, vectorized=False), reqs)
+        assert ra == rb
+        assert fa == fb
+
+    @pytest.mark.parametrize("router", ROUTERS)
+    def test_cluster_vec_matches_ref(self, router):
+        reqs = _trace(200, pattern="bursty", rate=1.2, seed=11)
+        oracle = LatentOracle()
+        ra, fa = _row_and_finishes(
+            Cluster(3, 4, 2 * (256 + 512), QPOL, router=router,
+                    predictor=oracle, vectorized=True), reqs)
+        rb, fb = _row_and_finishes(
+            Cluster(3, 4, 2 * (256 + 512), QPOL, router=router,
+                    predictor=oracle, vectorized=False), reqs)
+        assert ra == rb
+        assert fa == fb
+
+    @given(st.integers(0, 10_000))
+    def test_engine_vec_matches_ref_random(self, seed):
+        reqs = _trace(60, pattern="poisson", rate=0.6, seed=seed)
+        pol = Policy("fcfs", "quantile", quantile=0.85, max_seq_len=512)
+        kv = 2 * (256 + 512)
+        ra, fa = _row_and_finishes(
+            SimEngine(4, kv, pol, predictor=LatentOracle(),
+                      vectorized=True), reqs)
+        rb, fb = _row_and_finishes(
+            SimEngine(4, kv, pol, predictor=LatentOracle(),
+                      vectorized=False), reqs)
+        assert ra == rb and fa == fb
+
+
+class TestClusterInvariants:
+    def _run(self, router="psq", n=600, seed=0):
+        reqs = _trace(n, pattern="bursty", rate=1.5, seed=seed)
+        cl = Cluster(4, 4, 2 * (256 + 512), QPOL, router=router,
+                     predictor=LatentOracle())
+        stats = cl.run(reqs)
+        return cl, stats, reqs
+
+    def test_every_request_completes_exactly_once(self):
+        cl, stats, reqs = self._run()
+        done = [r for e in cl.engines for r in e.done]
+        assert stats.completed == len(reqs) == len(done)
+        assert {r.rid for r in done} == {r.rid for r in reqs}
+
+    def test_each_request_assigned_one_replica(self):
+        cl, _, reqs = self._run(router="least_kv")
+        for e_idx, e in enumerate(cl.engines):
+            assert all(r.replica == e_idx for r in e.done)
+
+    def test_kv_pages_conserved_per_replica(self):
+        cl, _, _ = self._run()
+        for e in cl.engines:
+            assert e.kv.reserved_now == 0          # all reservations released
+            assert e.kv.reserved == {}             # scalar/dict in sync
+            assert e.kv.peak_reserved <= e.kv.budget_tokens
+            assert 0.0 <= e.kv.waste_ratio <= 1.0
+
+    def test_deterministic_replay(self):
+        _, sa, _ = self._run(seed=3)
+        _, sb, _ = self._run(seed=3)
+        assert sa.row() == sb.row()
+
+    def test_round_robin_spreads_requests(self):
+        cl, _, reqs = self._run(router="round_robin")
+        counts = [len(e.done) for e in cl.engines]
+        assert max(counts) - min(counts) <= 1
+
+
+class TestEngineStepInvariants:
+    def test_no_slot_double_occupancy_and_budget(self):
+        """Drive the stepwise API directly, asserting per-tick invariants:
+        distinct rids in slots, slot cap, budget never exceeded, scalar
+        reservation counter consistent with the per-request dict."""
+        reqs = _trace(120, rate=2.0, seed=13)
+        for r in reqs:
+            r.reserve_len = 300.0   # pre-annotated quantile-ish reservations
+        pol = Policy("fcfs", "quantile", max_seq_len=512)
+        eng = SimEngine(max_slots=3, kv_budget=2500, policy=pol)
+        from repro.serving.scheduler import annotate_predictions
+        annotate_predictions(reqs, None, pol)
+        eng.submit(reqs)
+        guard = 0
+        while not eng.idle and guard < 200_000:
+            eng.step()
+            guard += 1
+            rids = [r.rid for r in eng._slots]
+            assert len(rids) == len(set(rids)) == eng._n_active
+            assert eng._n_active <= eng.max_slots
+            assert eng.kv.reserved_now <= eng.kv.budget_tokens
+            assert eng.kv.reserved_now == sum(eng.kv.reserved.values())
+        assert eng.idle
+        assert len(eng.done) == len(reqs)
+
+
+class TestDeadlockRecovery:
+    def test_kv_exhaustion_does_not_livelock(self):
+        """All slots stalled on grows the budget can't satisfy must trigger
+        OOM eviction (progress-keeping preemption), not an infinite stall:
+        every request still completes, in both decode paths, identically."""
+        reqs = _trace(250, pattern="bursty", rate=1.2, seed=3,
+                      model="mix", scenario="mix")
+        pol = Policy("srtf_pred", "quantile", quantile=0.9, max_seq_len=512,
+                     preempt=True)
+        rows = {}
+        for vec in (True, False):
+            eng = SimEngine(4, 2 * (256 + 512), pol, predictor=LatentOracle(),
+                            vectorized=vec)
+            stats = eng.run(reqs, max_steps=500_000)
+            assert stats.completed == len(reqs)
+            assert stats.oom_evictions > 0       # the deadlock was hit+broken
+            assert eng.kv.reserved_now == 0
+            rows[vec] = stats.row()
+        assert rows[True] == rows[False]
+
+    def test_unservable_request_is_dropped_not_livelocked(self):
+        """A request needing more KV than the entire pool can never finish;
+        it must be dropped (after its reservation ask hits the pool cap)
+        instead of cycling evict/admit until max_steps."""
+        from repro.serving.request import Request
+        big = Request(rid=0, arrival=0.0, prompt_len=256, true_len=2000,
+                      reserve_len=300.0, predicted_len=300.0)
+        ok = Request(rid=1, arrival=1.0, prompt_len=32, true_len=100,
+                     reserve_len=150.0, predicted_len=100.0)
+        pol = Policy("fcfs", "quantile", max_seq_len=4096)
+        st = SimEngine(2, 1024, pol).run([big, ok], max_steps=100_000)
+        assert st.dropped == 1
+        assert st.completed == 1          # the servable request still finishes
+        assert st.makespan < 10_000       # terminated, not max_steps spin
+
+    def test_eviction_ask_never_exceeds_pool(self):
+        """Escalating reservation asks are clamped to the pool size, so an
+        evicted request always stays admittable."""
+        reqs = _trace(300, pattern="bursty", rate=2.0, seed=9,
+                      model="mix", scenario="mix")
+        pol = Policy("fcfs", "quantile", quantile=0.9, max_seq_len=512)
+        eng = SimEngine(6, 1536, pol, predictor=LatentOracle())
+        st = eng.run(reqs, max_steps=500_000)
+        assert st.completed + st.dropped == len(reqs)
+        assert st.completed == len(reqs)  # this trace fits the pool
+        assert eng.kv.reserved_now == 0
+
+    def test_empty_run_returns_empty_stats(self):
+        pol = Policy("fcfs", "quantile", max_seq_len=512)
+        st = SimEngine(4, 1000, pol, predictor=LatentOracle()).run([])
+        assert st.completed == 0
+        cst = Cluster(2, 4, 1000, pol, router="psq",
+                      predictor=LatentOracle()).run([])
+        assert cst.completed == 0
+
+
+class TestRouterQuality:
+    def test_quantile_reservation_beats_max_reserve(self):
+        """Tight KV budget: distributional reservation admits far more
+        concurrency than max-reserve, cutting p99 latency AND waste."""
+        reqs = _trace(800, pattern="bursty", rate=1.2, seed=2,
+                      model="mix", scenario="mix")
+        naive = Cluster(4, 8, 2 * (256 + 512),
+                        Policy("fcfs", "max", max_seq_len=512),
+                        router="round_robin",
+                        predictor=LatentOracle()).run(reqs)
+        prod = Cluster(4, 8, 2 * (256 + 512), QPOL, router="psq",
+                       predictor=LatentOracle()).run(reqs)
+        assert prod.completed == naive.completed == len(reqs)
+        assert prod.p99_latency < naive.p99_latency
+        assert prod.kv_waste_ratio < naive.kv_waste_ratio

@@ -35,9 +35,12 @@ def test_reduced_train_step(arch):
     params = m.init(jax.random.PRNGKey(0))
     B, S = 2, 16
     batch = _batch_for(cfg, jax.random.PRNGKey(1), B, S)
-    loss, metrics = m.loss(params, batch, RT)
+    # one jitted value_and_grad: XLA-compiling the 2-layer graph is several
+    # times cheaper than dispatching loss + grad op-by-op in eager mode
+    loss_and_grads = jax.jit(
+        jax.value_and_grad(lambda p: m.loss(p, batch, RT)[0]))
+    loss, grads = loss_and_grads(params)
     assert np.isfinite(float(loss)), arch
-    grads = jax.grad(lambda p: m.loss(p, batch, RT)[0])(params)
     gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
     assert np.isfinite(gnorm) and gnorm > 0, arch
 

@@ -26,13 +26,16 @@ def test_int8_kv_single_step_error_small():
     rt = Runtime.local()
     cache_fp = m.init_cache(B, S + 2)
     cache_q = m.init_cache(B, S + 2, kv_quant=True)
+    # jit the decode step (one compile per cache dtype) — the numerics under
+    # test are identical, but 12 eager decode graphs cost ~25s on CPU
+    step = jax.jit(lambda p, db, c: m.decode_step(p, db, c, rt))
     # build BOTH caches from the fp trajectory (feed the same tokens; the
     # quantized model's divergence is reset by re-feeding ground-truth tokens)
     for t in range(S):
         db = {"tokens": toks[:, t], "pos": jnp.full((B,), t, jnp.int32),
               "lengths": jnp.full((B,), t + 1, jnp.int32)}
-        lf, _, cache_fp = m.decode_step(params, db, cache_fp, rt)
-        lq, _, cache_q = m.decode_step(params, db, cache_q, rt)
+        lf, _, cache_fp = step(params, db, cache_fp)
+        lq, _, cache_q = step(params, db, cache_q)
     scale = float(jnp.max(jnp.abs(lf)))
     # average error across the trajectory must stay bounded (untrained nets
     # are chaotic, so compare medians not maxima)

@@ -25,7 +25,9 @@ def scenario():
 @pytest.fixture(scope="module")
 def pcfg(scenario):
     bm = float(np.quantile(scenario.len_train, 0.999) * 1.3)
-    return PredictorConfig(n_bins=48, bin_max=bm, epochs=15)
+    # hidden=256 halves head-training time; every assertion here is relative
+    # (method vs method), so the paper-structure checks are unaffected
+    return PredictorConfig(n_bins=48, bin_max=bm, epochs=15, hidden=256)
 
 
 def test_predictor_learns(scenario, pcfg):
@@ -71,8 +73,12 @@ def test_method_ordering_matches_paper(scenario, pcfg):
     last-token view beats the proxy and entropy views; everything beats the
     constant."""
     k = jax.random.PRNGKey(2)
-    res = {m: run_method(jax.random.fold_in(k, i), scenario, m, pcfg)
-           for i, m in enumerate(METHODS)}
+    # train only the methods the assertions below compare (s3/trail_mean are
+    # covered by their own tests); keep fold_in indices = METHODS positions
+    # so each method's result is identical to the full sweep's
+    needed = ("constant_median", "trail_last", "egtp", "prod_m", "prod_d")
+    res = {m: run_method(jax.random.fold_in(k, METHODS.index(m)),
+                         scenario, m, pcfg) for m in needed}
     assert res["prod_d"].test_mae < res["trail_last"].test_mae
     # the paper's ProD-M vs TRAIL-last gap is ~5%; allow small-sample noise
     assert res["prod_m"].test_mae < res["trail_last"].test_mae * 1.05

@@ -132,7 +132,7 @@ class TestPreemptiveSRTF:
         assert st.makespan < 200 + 10 + 30
 
 
-from hypothesis import given, settings, strategies as st_
+from _hypothesis_compat import given, settings, strategies as st_
 
 @settings(deadline=None, max_examples=25)
 @given(st_.integers(2, 40), st_.integers(0, 10_000),

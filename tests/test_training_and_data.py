@@ -65,7 +65,7 @@ class TestTrainer:
         cfg = get_config("tiny-lm").with_overrides(dtype="float32", n_layers=2)
         model = build_model(cfg)
         tcfg = TrainConfig(lr=1e-2, schedule="constant", warmup_steps=2, seed=0)
-        ds = make_lm_dataset(128, 48, seed=0)
+        ds = make_lm_dataset(128, 32, seed=0)
         ds.tokens = np.minimum(ds.tokens, cfg.vocab_size - 1)
         it = batch_iterator(ds, 8, seed=0)
         # capture first/last loss
@@ -74,10 +74,10 @@ class TestTrainer:
         step = jax.jit(make_train_step(model, tcfg, Runtime.local()))
         tree = state.tree()
         losses = []
-        for i in range(60):
+        for i in range(40):
             tree, m = step(tree, next(it))
             losses.append(float(m["loss"]))
-        assert min(losses[-5:]) < losses[0] - 0.4, losses[::10]
+        assert min(losses[-5:]) < losses[0] - 0.3, losses[::10]
 
     def test_microbatch_equivalent_direction(self):
         cfg = get_config("tiny-lm").with_overrides(dtype="float32", n_layers=1)
