@@ -21,9 +21,10 @@ import time
 import numpy as np
 
 from repro.serving.arrivals import (LatentOracle, TraceConfig, make_trace,
-                                    mean_true_length, stable_rate)
+                                    mean_true_length, stable_rate,
+                                    stable_rate_specs)
 from repro.serving.cluster import Cluster
-from repro.serving.engine import SimEngine
+from repro.serving.engine import ReplicaSpec, SimEngine
 from repro.serving.request import workload_from_scenario
 from repro.serving.scheduler import Policy
 
@@ -140,8 +141,8 @@ def run_cluster(n_requests=50_000, n_replicas=4, max_slots=32,
     rows = []
     for router, pol in CLUSTER_MATRIX:
         t0 = time.time()
-        st = Cluster(n_replicas, max_slots, kv_budget, pol, router=router,
-                     predictor=oracle).run(reqs)
+        st = Cluster.uniform(n_replicas, max_slots, kv_budget, pol,
+                             router=router, predictor=oracle).run(reqs)
         dt = time.time() - t0
         row = st.row()
         row["seconds"] = dt
@@ -172,8 +173,118 @@ def validate_cluster(rows) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# heterogeneous fleet × SLO × work stealing
+# ---------------------------------------------------------------------------
+
+def hetero_specs(max_slots=32) -> tuple:
+    """2 fast large replicas + 2 slow small ones (half the slots/KV, 1/2 the
+    decode speed) — the mixed-fleet regime where load-blind routing breaks."""
+    kv_fast = 8 * (256 + 4096)
+    return (
+        ReplicaSpec(max_slots, kv_fast, speed=2, prefill_tokens_per_step=256),
+        ReplicaSpec(max_slots, kv_fast, speed=2, prefill_tokens_per_step=256),
+        ReplicaSpec(max_slots // 2, kv_fast // 2, speed=1,
+                    prefill_tokens_per_step=128),
+        ReplicaSpec(max_slots // 2, kv_fast // 2, speed=1,
+                    prefill_tokens_per_step=128),
+    )
+
+
+HETERO_MATRIX = (
+    # (router, policy, rebalance_every, steal) — the load/speed-blind
+    # round_robin baseline vs increasingly prediction-aware stacks, ending in
+    # the full ProD stack: psq dispatch + quantile reservation + ProD-aware
+    # quantile work stealing
+    ("round_robin", Policy("fcfs", "max", max_seq_len=4096), 0, "tail"),
+    ("round_robin", Policy("fcfs", "quantile", quantile=0.9,
+                           max_seq_len=4096), 0, "tail"),
+    ("jsq", Policy("fcfs", "quantile", quantile=0.9, max_seq_len=4096),
+     0, "tail"),
+    ("psq", Policy("fcfs", "quantile", quantile=0.9, max_seq_len=4096),
+     0, "tail"),
+    ("psq", Policy("fcfs", "quantile", quantile=0.9, max_seq_len=4096),
+     100, "tail"),
+    ("psq", Policy("fcfs", "quantile", quantile=0.9, max_seq_len=4096),
+     100, "quantile"),
+)
+
+
+def run_cluster_hetero(n_requests=50_000, max_slots=32, pattern="bursty",
+                       load=0.8, slo_factor=8.0, slo_floor=200.0, seed=0,
+                       verbose=True):
+    """Heterogeneous 4-replica fleet under per-class SLOs: router ×
+    reservation × work-stealing matrix over one heavy-tailed trace. The
+    arrival rate targets ``load`` of the fleet's speed-weighted decode
+    capacity, so speed-blind dispatch structurally overloads the slow
+    replicas — the regime where prediction-aware routing + stealing pays."""
+    specs = hetero_specs(max_slots)
+    probe = make_trace(TraceConfig(n_requests=2000, rate=1.0, seed=seed))
+    rate = stable_rate_specs(specs, mean_true_length(probe), load)
+    cfg = TraceConfig(n_requests=n_requests, rate=rate, pattern=pattern,
+                      model="mix", scenario="mix", seed=seed,
+                      slo_factor=slo_factor, slo_floor=slo_floor)
+    t0 = time.time()
+    reqs = make_trace(cfg)
+    if not reqs:
+        print("empty trace (n_requests=0): nothing to replay")
+        return []
+    if verbose:
+        print(f"hetero trace: {n_requests} requests ({pattern}, "
+              f"rate {rate:.3f}/step, mean len {mean_true_length(reqs):.0f}, "
+              f"SLO = arrival + {slo_floor:.0f} + {slo_factor:.0f}x class "
+              f"median) built in {time.time() - t0:.1f}s")
+        print(f"  specs: 2x(slots={max_slots},speed=2) + "
+              f"2x(slots={max_slots // 2},speed=1), prefill modeled")
+        print(f"  {'router':12s} {'policy':16s} {'steal':>12s} {'p50':>8s} "
+              f"{'p99':>9s} {'viol':>6s} {'t/o':>6s} {'goodput':>8s} "
+              f"{'stolen':>7s} {'secs':>6s}")
+    oracle = LatentOracle()
+    rows = []
+    for router, pol, reb, steal in HETERO_MATRIX:
+        t0 = time.time()
+        st = Cluster(specs, pol, router=router, predictor=oracle,
+                     rebalance_every=reb, steal=steal).run(reqs)
+        dt = time.time() - t0
+        row = st.row()
+        row["seconds"] = dt
+        row["rebalance_every"] = reb
+        row["steal"] = steal if reb else "off"
+        rows.append(row)
+        if verbose:
+            label = f"{steal}@{reb}" if reb else "off"
+            print(f"  {st.router:12s} {st.policy:16s} {label:>12s} "
+                  f"{st.p50_latency:8.1f} {st.p99_latency:9.1f} "
+                  f"{st.slo_violations:6d} {st.timed_out:6d} "
+                  f"{st.goodput:8.2f} {st.stolen:7d} {dt:6.1f}")
+    return rows
+
+
+def validate_cluster_hetero(rows) -> dict:
+    if not rows:
+        return {"empty_trace": True}
+    by = {(r["router"], r["policy"], r["steal"]): r for r in rows}
+    naive = by[("round_robin", "fcfs+max", "off")]
+    prod = by[("psq", "fcfs+quantile", "quantile")]
+
+    def bad(r):
+        return r["slo_violations"] + r["timed_out"]
+
+    return {
+        "prod_steal_beats_rr_p99": prod["p99_latency"] < naive["p99_latency"],
+        "prod_steal_beats_rr_slo": bad(prod) < bad(naive),
+        "prod_p99_gain_x": naive["p99_latency"]
+        / max(prod["p99_latency"], 1e-9),
+        "prod_slo_gain_x": bad(naive) / max(bad(prod), 1e-9),
+        "prod_goodput_gain_x": prod["goodput"]
+        / max(naive["goodput"], 1e-9),
+        "stealing_used": prod["stolen"] > 0,
+        "replay_under_60s": all(r["seconds"] < 60.0 for r in rows),
+    }
+
+
 def main(fast=True, cluster=True, cluster_only=False, n_requests=50_000,
-         n_replicas=4, max_slots=32, pattern="bursty", seed=0):
+         n_replicas=4, max_slots=32, pattern="bursty", seed=0, hetero=True):
     rows = None
     if not cluster_only:
         rows = run(fast=fast)
@@ -182,6 +293,10 @@ def main(fast=True, cluster=True, cluster_only=False, n_requests=50_000,
         crows = run_cluster(n_requests=n_requests, n_replicas=n_replicas,
                             max_slots=max_slots, pattern=pattern, seed=seed)
         print("cluster checks:", validate_cluster(crows))
+    if hetero and (cluster or cluster_only):
+        hrows = run_cluster_hetero(n_requests=n_requests, max_slots=max_slots,
+                                   pattern=pattern, seed=seed)
+        print("hetero checks:", validate_cluster_hetero(hrows))
     return rows
 
 
@@ -190,6 +305,8 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--cluster-only", action="store_true")
+    ap.add_argument("--no-hetero", action="store_true",
+                    help="skip the heterogeneous x SLO x stealing table")
     ap.add_argument("--n-requests", type=int, default=50_000)
     ap.add_argument("--n-replicas", type=int, default=4)
     ap.add_argument("--max-slots", type=int, default=32)
@@ -199,4 +316,4 @@ if __name__ == "__main__":
     args = ap.parse_args()
     main(cluster_only=args.cluster_only, n_requests=args.n_requests,
          n_replicas=args.n_replicas, max_slots=args.max_slots,
-         pattern=args.pattern, seed=args.seed)
+         pattern=args.pattern, seed=args.seed, hetero=not args.no_hetero)

@@ -33,7 +33,7 @@ from repro.data.pipeline import batch_iterator, make_lm_dataset
 from repro.data.tokenizer import N_TOPICS, ToyTokenizer
 from repro.models.model_zoo import Runtime, build_model
 from repro.serving.cluster import Cluster
-from repro.serving.engine import RealEngine, SimEngine
+from repro.serving.engine import RealEngine, ReplicaSpec, SimEngine
 from repro.serving.request import Request
 from repro.serving.scheduler import Policy
 from repro.training.trainer import train_loop
@@ -106,21 +106,33 @@ def main():
               f"p90={st.p90_latency:7.1f} waste={st.kv_waste_ratio:.3f} "
               f"thr={st.throughput:.2f}")
 
-    # -- 5. multi-replica cluster replay with the trained ProD head ----------
-    print("[5/5] replaying across a 2-replica cluster ...")
-    for router, pol in (
-            ("round_robin", Policy("fcfs", "max", max_seq_len=args.max_new)),
+    # -- 5. heterogeneous cluster replay with the trained ProD head ----------
+    # a fast large replica next to a slow small one, per-request SLOs, and
+    # periodic ProD-aware work stealing: the full prediction-aware stack
+    print("[5/5] replaying across a heterogeneous 2-replica cluster "
+          "(speed 2x+1x, SLOs, work stealing) ...")
+    specs = (ReplicaSpec(4, 2 * (6 + args.max_new), speed=2,
+                         prefill_tokens_per_step=8),
+             ReplicaSpec(2, 6 + args.max_new, speed=1,
+                         prefill_tokens_per_step=4))
+    for r in reqs:
+        r.deadline = r.arrival + 3.0 * args.max_new   # per-request SLO
+    for router, pol, reb in (
+            ("round_robin", Policy("fcfs", "max", max_seq_len=args.max_new),
+             0),
             ("psq", Policy("fcfs", "quantile", quantile=0.9,
-                           max_seq_len=args.max_new))):
-        cl = Cluster(n_replicas=2, max_slots=4,
-                     kv_budget=2 * (6 + args.max_new), policy=pol,
-                     router=router, predictor=pred)
+                           max_seq_len=args.max_new), 25)):
+        cl = Cluster(specs, pol, router=router, predictor=pred,
+                     rebalance_every=reb, steal="quantile")
         st = cl.run(reqs)
-        print(f"      {st.router:12s}+{st.policy:18s} "
+        label = f"steal@{reb}" if reb else "no-steal"
+        print(f"      {st.router:12s}+{st.policy:14s} {label:9s} "
               f"p50={st.p50_latency:7.1f} p99={st.p99_latency:7.1f} "
-              f"waste={st.kv_waste_ratio:.3f} balance={st.balance:.2f}")
-    print("done — ProD scheduling/routing vs prediction-blind baselines "
-          "shown above.")
+              f"viol={st.slo_violations} t/o={st.timed_out} "
+              f"goodput={st.goodput:.2f} stolen={st.stolen} "
+              f"balance={st.balance:.2f}")
+    print("done — ProD scheduling/routing/stealing vs prediction-blind "
+          "baselines shown above.")
 
 
 if __name__ == "__main__":

@@ -2,15 +2,17 @@
 continuous-batching engines (discrete-event simulator + real tiny-LM), and
 the open-loop multi-replica cluster simulator (arrival traces + routers)."""
 
-from repro.serving.arrivals import LatentOracle, TraceConfig, make_trace
-from repro.serving.cluster import Cluster, ClusterStats, ROUTERS
-from repro.serving.engine import ServeStats, SimEngine
+from repro.serving.arrivals import (LatentOracle, TraceConfig, make_trace,
+                                    stable_rate_specs)
+from repro.serving.cluster import Cluster, ClusterStats, ROUTERS, STEAL_MODES
+from repro.serving.engine import ReplicaSpec, ServeStats, SimEngine
 from repro.serving.kvcache import KVCacheManager
 from repro.serving.request import Request, workload_from_scenario
 from repro.serving.scheduler import Policy
 
 __all__ = [
     "Cluster", "ClusterStats", "KVCacheManager", "LatentOracle", "Policy",
-    "ROUTERS", "Request", "ServeStats", "SimEngine", "TraceConfig",
-    "make_trace", "workload_from_scenario",
+    "ROUTERS", "ReplicaSpec", "Request", "STEAL_MODES", "ServeStats",
+    "SimEngine", "TraceConfig", "make_trace", "stable_rate_specs",
+    "workload_from_scenario",
 ]

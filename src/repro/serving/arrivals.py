@@ -43,6 +43,11 @@ class TraceConfig:
     prompt_max: int = 256
     max_seq_len: int = 4096         # decode lengths clipped to the serve cap
     view: str = "last"              # predictor probe view (feature noise)
+    # per-class SLOs: deadline = arrival + slo_floor + slo_factor × the
+    # setting's typical length (its law's median scale) — chat gets a bigger
+    # absolute budget than math, the per-token budget is shared. 0 = no SLOs.
+    slo_factor: float = 0.0
+    slo_floor: float = 0.0
     # bursty (2-state MMPP)
     burst_rate_mult: float = 6.0
     burst_len_mean: float = 200.0   # mean steps per burst episode
@@ -142,6 +147,7 @@ def make_trace(cfg: TraceConfig) -> List[Request]:
 
     true_len = np.zeros(n, np.int64)
     phi = np.zeros((n, 4), np.float64)
+    slo_budget = np.zeros(n, np.float64)
     for si, (model, scen) in enumerate(settings):
         idx = np.nonzero(pick == si)[0]
         if len(idx) == 0:
@@ -153,14 +159,17 @@ def make_trace(cfg: TraceConfig) -> List[Request]:
         noisy[:, 0] += feature_sigma(spec, cfg.view) * rng.standard_normal(
             len(idx))
         phi[idx] = noisy
+        slo_budget[idx] = cfg.slo_floor + cfg.slo_factor * spec.law.median_scale
     true_len = np.minimum(true_len, cfg.max_seq_len)
     plen = rng.integers(cfg.prompt_min, cfg.prompt_max, size=n)
+    with_slo = cfg.slo_factor > 0.0 or cfg.slo_floor > 0.0
 
     reqs = [
         Request(
             rid=i, arrival=float(arrivals[i]), prompt_len=int(plen[i]),
             true_len=int(true_len[i]), phi=phi[i],
             setting="/".join(settings[pick[i]]),
+            deadline=float(arrivals[i] + slo_budget[i]) if with_slo else None,
         )
         for i in range(n)
     ]
@@ -194,3 +203,11 @@ def stable_rate(n_replicas: int, max_slots: int, mean_len: float,
     """Arrival rate giving the cluster utilization ``load``: each slot emits
     one token per step, so capacity is n_replicas·max_slots/mean_len req/step."""
     return load * n_replicas * max_slots / max(mean_len, 1.0)
+
+
+def stable_rate_specs(specs, mean_len: float, load: float = 0.7) -> float:
+    """Heterogeneity-aware :func:`stable_rate`: cluster decode capacity is
+    Σ slots·speed tokens/step over the :class:`ReplicaSpec` fleet (prefill
+    cost is ignored — treat ``load`` as a decode-utilization target)."""
+    service = float(sum(s.max_slots * s.speed for s in specs))
+    return load * service / max(mean_len, 1.0)

@@ -1,17 +1,35 @@
 """Multi-replica serving cluster: a router dispatching an open-loop trace to
-N independent :class:`SimEngine` replicas stepped in lockstep.
+N (possibly heterogeneous) :class:`SimEngine` replicas stepped in lockstep.
+
+Each replica is described by a :class:`~repro.serving.engine.ReplicaSpec`
+(slots, KV budget, decode speed, prefill rate), so the cluster can model a
+mixed fleet — e.g. two fast large-memory accelerators next to two slow small
+ones. Router load signals are speed-aware: they normalize by each replica's
+service rate / budget, so a twice-as-fast replica looks half as loaded at
+equal backlog (for a homogeneous fleet this reduces exactly to the unscaled
+signals).
 
 Router policies:
 
 * ``round_robin`` — rid-order rotation, load-blind (the baseline);
-* ``jsq``         — join-shortest-queue by outstanding request count;
-* ``least_kv``    — least outstanding reserved-KV (active reservations plus
-  queued reservation needs): memory-pressure-aware but length-blind;
+* ``jsq``         — join-shortest-queue: outstanding requests per unit of
+  service rate (slots × speed);
+* ``least_kv``    — least outstanding reserved-KV *fraction* (active
+  reservations plus queued reservation needs, over the replica's budget):
+  memory-pressure-aware but length-blind;
 * ``psq``         — predicted-shortest-queue: joins the replica with the
-  least *predicted remaining decode tokens* (active + queued). This is the
-  router only a length predictor enables; with ``reserve="quantile"`` the
-  same ProD-D distribution also sizes each request's KV reservation, giving
-  the full prediction-aware serving stack.
+  least *predicted remaining decode tokens* per unit of service rate
+  (active + queued). This is the router only a length predictor enables;
+  with ``reserve="quantile"`` the same ProD-D distribution also sizes each
+  request's KV reservation, giving the full prediction-aware serving stack.
+
+Work stealing: with ``rebalance_every=k`` the cluster pauses every k steps
+and migrates *queued* (never active — their KV lives on the donor) requests
+from the most- to the least-loaded replica under the router's own load
+metric, until their queue lengths meet in the middle. ``steal="quantile"``
+is the ProD-aware variant: it steals the requests with the largest
+predicted-quantile remaining work, moving the most token-load per migration;
+``steal="tail"`` takes the entries the donor would serve last.
 
 All replicas share one global clock; dispatch happens at request arrival
 (open loop — the router never sees realized lengths, only predictions).
@@ -24,11 +42,13 @@ from typing import List, Sequence
 
 import numpy as np
 
-from repro.serving.engine import SimEngine, _latency_stats
+from repro.serving.engine import (ReplicaSpec, SimEngine, _goodput,
+                                  _latency_stats)
 from repro.serving.request import Request
 from repro.serving.scheduler import Policy, annotate_predictions
 
 ROUTERS = ("round_robin", "jsq", "least_kv", "psq")
+STEAL_MODES = ("tail", "quantile")
 
 
 @dataclass
@@ -49,6 +69,10 @@ class ClusterStats:
     preemptions: int = 0
     oom_evictions: int = 0
     dropped: int = 0
+    timed_out: int = 0             # queue entries expired before starting
+    slo_violations: int = 0        # completed past their deadline
+    goodput: float = 0.0           # within-SLO completed tokens / step
+    stolen: int = 0                # queued requests migrated by rebalancing
     balance: float = 1.0           # max/mean completed tokens per replica
     replica_rows: List[dict] = field(default_factory=list)
 
@@ -59,51 +83,114 @@ class ClusterStats:
 
 
 class Cluster:
-    """N-replica trace-driven cluster simulator."""
+    """N-replica trace-driven cluster simulator over per-replica specs."""
 
-    def __init__(self, n_replicas: int, max_slots: int, kv_budget: int,
-                 policy: Policy, router: str = "round_robin", predictor=None,
-                 vectorized: bool = True):
+    def __init__(self, specs: Sequence[ReplicaSpec], policy: Policy,
+                 router: str = "round_robin", predictor=None,
+                 vectorized: bool = True, rebalance_every: int = 0,
+                 steal: str = "tail"):
         if router not in ROUTERS:
             raise ValueError(f"router {router!r} not in {ROUTERS}")
-        self.n_replicas = n_replicas
+        if steal not in STEAL_MODES:
+            raise ValueError(f"steal {steal!r} not in {STEAL_MODES}")
+        specs = tuple(specs)
+        if not specs:
+            raise ValueError("need at least one ReplicaSpec")
+        self.specs = specs
+        self.n_replicas = len(specs)
         self.router = router
         self.policy = policy
         self.predictor = predictor
+        self.rebalance_every = int(rebalance_every)
+        self.steal = steal
+        self.stolen = 0
         self.engines = [
-            SimEngine(max_slots, kv_budget, policy, predictor=None,
-                      vectorized=vectorized)
-            for _ in range(n_replicas)
+            SimEngine(policy=policy, predictor=None, vectorized=vectorized,
+                      spec=spec)
+            for spec in specs
         ]
         self._rr = 0
 
+    @classmethod
+    def uniform(cls, n_replicas: int, max_slots: int, kv_budget: int,
+                policy: Policy, **kw) -> "Cluster":
+        """Homogeneous fleet — the pre-heterogeneity constructor shape."""
+        spec = ReplicaSpec(max_slots=max_slots, kv_budget=kv_budget)
+        return cls([spec] * n_replicas, policy, **kw)
+
     # -- dispatch ------------------------------------------------------------
+
+    def _loads(self) -> List[float]:
+        """Per-replica load under the router's own metric, normalized by
+        replica capacity so heterogeneous fleets compare fairly."""
+        if self.router == "least_kv":
+            return [e.outstanding_kv / s.kv_budget
+                    for e, s in zip(self.engines, self.specs)]
+        if self.router == "psq":
+            return [e.predicted_backlog() / s.service_rate
+                    for e, s in zip(self.engines, self.specs)]
+        # jsq — and the rebalance metric for round_robin
+        return [e.outstanding_requests / s.service_rate
+                for e, s in zip(self.engines, self.specs)]
 
     def _route(self, req: Request) -> int:
         if self.router == "round_robin":
             i = self._rr
             self._rr = (self._rr + 1) % self.n_replicas
             return i
-        if self.router == "jsq":
-            loads = [e.outstanding_requests for e in self.engines]
-        elif self.router == "least_kv":
-            loads = [e.outstanding_kv for e in self.engines]
-        else:  # psq: ProD predicted-remaining-token backlog
-            loads = [e.predicted_backlog() for e in self.engines]
+        loads = self._loads()
+        # capacity-aware: never choose a replica whose whole KV pool cannot
+        # hold the request when one that can exists (on a no-fit fleet the
+        # engine drops the request as unservable)
+        need = int(req.prompt_len + req.reserve_len)
+        fits = [i for i, s in enumerate(self.specs) if need <= s.kv_budget]
+        if fits and len(fits) < self.n_replicas:
+            return min(fits, key=lambda i: loads[i])
         return int(np.argmin(loads))
+
+    # -- work stealing -------------------------------------------------------
+
+    def _rebalance(self):
+        """Migrate queued requests from the most- to the least-loaded replica
+        (router load metric). The steal size equalizes *service-rate-
+        normalized* queue lengths — (qd−k)/rate_d == (qt+k)/rate_t, which
+        reduces to (qd−qt)/2 for equal rates — so a fast replica standing
+        next to a slow one with the same raw queue length still steals.
+        Only requests that fit the thief's KV pool move, and active slots
+        never move — their KV pages live on the donor."""
+        loads = self._loads()
+        donor = int(np.argmax(loads))
+        thief = int(np.argmin(loads))
+        if donor == thief:
+            return
+        d_eng, t_eng = self.engines[donor], self.engines[thief]
+        rd = self.specs[donor].service_rate
+        rt = self.specs[thief].service_rate
+        qd, qt = len(d_eng._ready), len(t_eng._ready)
+        k = int((qd * rt - qt * rd) / (rd + rt))
+        if k <= 0:
+            return
+        moved = d_eng.steal_queued(k, mode=self.steal,
+                                   fit=self.specs[thief].kv_budget)
+        for r in moved:
+            r.replica = thief
+        t_eng.submit(moved)
+        self.stolen += len(moved)
 
     # -- lockstep replay -----------------------------------------------------
 
     def run(self, requests: Sequence[Request],
             max_steps: int = 10_000_000) -> ClusterStats:
-        reqs = [Request(**{**r.__dict__}) for r in requests]
+        reqs = [r.fresh_copy() for r in requests]
         annotate_predictions(reqs, self.predictor, self.policy)
         reqs.sort(key=lambda r: r.arrival)
         vectorized = all(e.vectorized for e in self.engines)
         for e in self.engines:
             e.reset()
         self._rr = 0
-        t = 0.0
+        self.stolen = 0
+        t = 0.0     # advances in unit ticks (plus integer leaps) from 0.0
+        next_reb = self.rebalance_every if self.rebalance_every > 0 else None
         ptr, n = 0, len(reqs)
         while True:
             while ptr < n and reqs[ptr].arrival <= t:
@@ -112,20 +199,25 @@ class Cluster:
                 r.replica = i
                 self.engines[i].submit([r])
                 ptr += 1
+            if next_reb is not None and t >= next_reb:
+                self._rebalance()
+                next_reb += self.rebalance_every
             if ptr >= n and all(e.idle for e in self.engines):
                 break
             if t >= max_steps:
                 break
             if vectorized:
                 # lockstep event leap: jump all replicas over the span in
-                # which no replica can admit/preempt/grow/complete and no
-                # trace arrival needs dispatching
+                # which no replica can admit/preempt/grow/complete, no trace
+                # arrival needs dispatching, and no rebalance tick falls
                 ks = [e.ticks_to_event() for e in self.engines]
                 k = min(ks)
                 if ptr < n:
                     # dispatch happens at loop start (arrival <= t), i.e. one
                     # tick earlier than an engine-internal arrival would fire
                     k = min(k, max(1.0, np.ceil(reqs[ptr].arrival - t)))
+                if next_reb is not None:
+                    k = min(k, max(1.0, float(next_reb) - t))
                 q = int(min(k - 1, max(max_steps - t - 1, 0)))
                 if q > 0:
                     for e in self.engines:
@@ -166,6 +258,10 @@ class Cluster:
             preemptions=sum(e.preemptions for e in self.engines),
             oom_evictions=sum(e.oom_evictions for e in self.engines),
             dropped=sum(e.dropped for e in self.engines),
+            timed_out=sum(e.timed_out for e in self.engines),
+            slo_violations=sum(e.slo_violations for e in self.engines),
+            goodput=_goodput(done, t),
+            stolen=self.stolen,
             balance=float(per_replica_toks.max()) / mean_toks,
             replica_rows=[e.stats().row() for e in self.engines],
             **_latency_stats(done),

@@ -6,6 +6,16 @@
   fixed-shape batching model). Used to quantify what better length prediction
   buys in throughput/latency/memory.
 
+  A replica's capacity is a :class:`ReplicaSpec`: slot count, KV budget, an
+  integer decode-speed multiplier (tokens emitted per slot per step — a
+  faster accelerator), and a prefill rate (``prefill_tokens_per_step``; an
+  admitted slot spends ``ceil(prompt_tokens / rate)`` ticks prefilling before
+  its first decode token, 0 = prefill is free). Requests may carry a
+  ``deadline``: queue entries whose deadline has passed — including
+  preempted requests waiting to resume — are dropped (``timed_out``) when
+  they reach the head of the ready queue, and requests finishing past their
+  deadline count as ``slo_violations``.
+
   The engine is *stepwise*: :meth:`submit` enqueues requests, :meth:`step`
   advances one decode tick, so a :class:`~repro.serving.cluster.Cluster` can
   drive N replicas in lockstep against a shared clock. :meth:`run` wraps the
@@ -33,6 +43,35 @@ from repro.serving.scheduler import (Policy, annotate_predictions,
                                      predicted_remaining)
 
 
+@dataclass(frozen=True)
+class ReplicaSpec:
+    """Per-replica capacity: what a heterogeneous cluster varies.
+
+    ``speed`` is an integer decode multiplier: every active (non-prefilling)
+    slot emits ``speed`` tokens per engine step. ``prefill_tokens_per_step``
+    is how many prompt tokens one prefill tick processes; 0 keeps the legacy
+    model where admission is free and the first decode token is immediate.
+    """
+    max_slots: int
+    kv_budget: int
+    speed: int = 1
+    prefill_tokens_per_step: int = 0
+
+    def __post_init__(self):
+        if self.max_slots <= 0 or self.kv_budget <= 0:
+            raise ValueError("max_slots and kv_budget must be positive")
+        if int(self.speed) != self.speed or self.speed < 1:
+            raise ValueError(f"speed must be a positive integer, got {self.speed}")
+        if self.prefill_tokens_per_step < 0:
+            raise ValueError("prefill_tokens_per_step must be >= 0")
+
+    @property
+    def service_rate(self) -> float:
+        """Decode tokens per step at full occupancy (the router's view of
+        how fast this replica drains work)."""
+        return float(self.max_slots * self.speed)
+
+
 @dataclass
 class ServeStats:
     policy: str
@@ -50,6 +89,10 @@ class ServeStats:
     preemptions: int = 0
     oom_evictions: int = 0
     dropped: int = 0               # unservable: need exceeds the whole pool
+    # deadline passed while queued (incl. preempted requests awaiting resume)
+    timed_out: int = 0
+    slo_violations: int = 0        # completed, but past the deadline
+    goodput: float = 0.0           # within-SLO completed tokens / step
 
     def row(self) -> dict:
         return self.__dict__.copy()
@@ -71,28 +114,47 @@ def _latency_stats(done: List[Request]) -> dict:
     )
 
 
+def _goodput(done: List[Request], makespan: float) -> float:
+    toks = sum(r.true_len for r in done if r.slo_met)
+    return toks / max(makespan, 1.0)
+
+
 class SimEngine:
     """Discrete-event continuous-batching simulator (one replica).
 
     Scheduling semantics per :meth:`step`:
 
-    1. *admit*: pop ready requests in policy order while a slot and KV
-       reservation budget are available (head-of-line blocks on memory);
+    1. *admit*: drop expired queue heads (``timed_out``), then pop ready
+       requests in policy order while a slot and KV reservation budget are
+       available (head-of-line blocks on memory). An admitted slot first
+       spends its prefill ticks (see :class:`ReplicaSpec`) emitting nothing;
     2. *preempt* (SRTF policies): the ready request with the shortest
        predicted remaining length evicts the longest-remaining active slot
        when the gap exceeds ``preempt_factor`` (progress is kept);
-    3. *decode*: every active slot emits one token. A slot that would outgrow
-       its reservation first grows it by max(25%, 16 tokens); if the budget
-       refuses, the slot stalls this tick (no token) and retries next tick.
+    3. *decode*: every active non-prefilling slot emits ``spec.speed``
+       tokens. A slot that would outgrow its reservation first grows it by
+       max(25%, 16, speed) tokens; if the budget refuses, the slot emits
+       only what fits (possibly nothing) this tick and retries next tick.
     """
 
-    def __init__(self, max_slots: int, kv_budget: int, policy: Policy,
-                 predictor=None, vectorized: bool = True):
-        self.max_slots = max_slots
+    def __init__(self, max_slots: Optional[int] = None,
+                 kv_budget: Optional[int] = None,
+                 policy: Optional[Policy] = None, predictor=None,
+                 vectorized: bool = True, spec: Optional[ReplicaSpec] = None):
+        if spec is None:
+            if max_slots is None or kv_budget is None:
+                raise ValueError(
+                    "SimEngine needs either spec=ReplicaSpec(...) or both "
+                    "max_slots and kv_budget")
+            spec = ReplicaSpec(max_slots=max_slots, kv_budget=kv_budget)
+        if policy is None:
+            raise ValueError("SimEngine needs a scheduling policy")
+        self.spec = spec
+        self.max_slots = spec.max_slots
         self.policy = policy
         self.predictor = predictor
         self.vectorized = vectorized
-        self._kv_budget = kv_budget
+        self._kv_budget = spec.kv_budget
         self.reset()
 
     # -- lifecycle -----------------------------------------------------------
@@ -103,7 +165,9 @@ class SimEngine:
         self.preemptions = 0
         self.oom_evictions = 0
         self.dropped = 0
-        self._progress = True       # did the last decode tick emit any token?
+        self.timed_out = 0
+        self.slo_violations = 0
+        self._progress = True       # did the last decode tick advance any slot?
         self._seq = 0                       # heap tie-break, FIFO among ties
         self._future: list = []             # (arrival, seq, Request)
         self._ready: list = []              # (policy key, seq, Request)
@@ -117,9 +181,11 @@ class SimEngine:
         self._a_res = np.zeros(m, np.int64)
         self._a_plen = np.zeros(m, np.int64)
         self._a_tlen = np.zeros(m, np.int64)
+        self._a_pref = np.zeros(m, np.int64)    # remaining prefill ticks
         self._a_pred = np.zeros(m, np.float64)
         self._used_sum = 0
         self._done: List[Request] = []
+        self._timed_out: List[Request] = []
 
     # -- queue ---------------------------------------------------------------
 
@@ -139,6 +205,16 @@ class SimEngine:
         self._ready_need += int(r.prompt_len + r.reserve_len)
         self._ready_pred += predicted_remaining(r)
 
+    def _forget_ready(self, r: Request):
+        """Undo _push_ready's aggregate accounting for a departing entry."""
+        self._ready_need -= int(r.prompt_len + r.reserve_len)
+        self._ready_pred -= predicted_remaining(r)
+
+    def _pop_ready(self) -> Request:
+        _, _, r = heapq.heappop(self._ready)
+        self._forget_ready(r)
+        return r
+
     def submit(self, requests: List[Request]):
         """Enqueue requests (already annotated with predictions/reservations).
         Requests with a future arrival wait in the arrival heap."""
@@ -156,6 +232,10 @@ class SimEngine:
     @property
     def done(self) -> List[Request]:
         return self._done
+
+    @property
+    def timed_out_requests(self) -> List[Request]:
+        return self._timed_out
 
     # -- router signals (cluster dispatch) -----------------------------------
 
@@ -175,20 +255,93 @@ class SimEngine:
         act = float(np.maximum(self._a_pred[:n] - self._a_gen[:n], 1.0).sum())
         return act + self._ready_pred
 
+    # -- work stealing (cluster rebalance) -----------------------------------
+
+    def steal_queued(self, k: int, mode: str = "tail",
+                     fit: Optional[int] = None) -> List[Request]:
+        """Remove up to ``k`` queued (ready, never active) requests so the
+        cluster can migrate them to a less-loaded replica.
+
+        ``mode='tail'`` takes the entries the local policy would serve last
+        (classic work-stealing deque: the owner pops the head, the thief
+        steals the tail). ``mode='quantile'`` is the ProD-aware variant: it
+        takes the requests with the largest predicted-quantile remaining work
+        (``reserve_len`` − progress), moving the most token-load per steal.
+        ``fit`` restricts stealing to requests whose reservation need fits
+        that budget (the thief's KV pool), so migration never strands an
+        oversized request on a small replica.
+        """
+        if k <= 0 or not self._ready:
+            return []
+        if mode == "quantile":
+            def keyf(e):
+                base = (e[2].reserve_len if e[2].reserve_len is not None
+                        else predicted_remaining(e[2]))
+                return (float(base) - e[2].generated, e[1])
+        else:   # 'tail': largest policy key = served last
+            keyf = None
+        idx = sorted(range(len(self._ready)),
+                     key=(lambda i: keyf(self._ready[i])) if keyf
+                     else self._ready.__getitem__)
+        if fit is not None:
+            idx = [i for i in idx
+                   if int(self._ready[i][2].prompt_len
+                          + self._ready[i][2].reserve_len) <= fit]
+        chosen = idx[len(idx) - min(k, len(idx)):]   # largest keys last
+        if not chosen:
+            return []
+        chosen_set = set(chosen)
+        keep = [e for i, e in enumerate(self._ready) if i not in chosen_set]
+        out = [self._ready[i][2] for i in chosen]
+        self._ready = keep
+        heapq.heapify(self._ready)
+        for r in out:
+            self._forget_ready(r)
+        return out
+
     # -- one engine tick -----------------------------------------------------
+
+    def _prefill_ticks(self, r: Request) -> int:
+        """Admission cost: ceil(prompt tokens / prefill rate). Resumed
+        (preempted) requests recompute prompt + generated progress — vLLM
+        recompute-preemption semantics."""
+        pts = self.spec.prefill_tokens_per_step
+        if pts <= 0:
+            return 0
+        return -(-(r.prompt_len + r.generated) // pts)
+
+    def _expire_ready_head(self):
+        """Drop ready-queue heads that can never start here: reservation need
+        larger than this replica's entire KV pool (``dropped`` — reachable on
+        heterogeneous fleets when routing or stealing lands an oversized
+        request on a small replica, and it must not wedge the queue), or
+        deadline passed (``timed_out`` — includes preempted requests waiting
+        to resume; their progress is discarded). Only the head is checked
+        (lazy TTL): entries deeper in the queue are dropped when they
+        surface, so router load signals may transiently count them."""
+        while self._ready:
+            r = self._ready[0][2]
+            if int(r.prompt_len + r.reserve_len) > self.kv.budget_tokens:
+                self._pop_ready()
+                self.dropped += 1
+                continue
+            if r.deadline is None or r.deadline >= self.t:
+                break
+            self._pop_ready()
+            self.timed_out += 1
+            self._timed_out.append(r)
 
     def _admit(self):
         while self._future and self._future[0][0] <= self.t:
             _, _, r = heapq.heappop(self._future)
             self._push_ready(r)
+        self._expire_ready_head()
         while self._n_active < self.max_slots and self._ready:
             _, _, cand = self._ready[0]
             need = int(cand.prompt_len + cand.reserve_len)
             if not self.kv.admit(cand.rid, need):
                 break  # KV-bound: head-of-line blocks on memory
-            heapq.heappop(self._ready)
-            self._ready_need -= need
-            self._ready_pred -= predicted_remaining(cand)
+            self._pop_ready()
             if cand.t_start is None:
                 cand.t_start = self.t
             i = self._n_active
@@ -198,11 +351,13 @@ class SimEngine:
             self._a_res[i] = need
             self._a_plen[i] = cand.prompt_len
             self._a_tlen[i] = cand.true_len
+            self._a_pref[i] = self._prefill_ticks(cand)
             self._a_pred[i] = (cand.predicted_len
                                if cand.predicted_len is not None
                                else float(cand.true_len))
             self._used_sum += int(self._a_used[i])
             self._n_active += 1
+            self._expire_ready_head()
 
     def _maybe_preempt(self):
         # SRTF preemption: a waiting request with much shorter predicted
@@ -228,7 +383,7 @@ class SimEngine:
         n = self._n_active
         self._slots.pop(i)
         for a in (self._a_gen, self._a_used, self._a_res, self._a_plen,
-                  self._a_tlen, self._a_pred):
+                  self._a_tlen, self._a_pref, self._a_pred):
             a[i:n - 1] = a[i + 1:n]
         self._n_active = n - 1
 
@@ -236,6 +391,8 @@ class SimEngine:
         r = self._slots[i]
         r.t_finish = self.t
         r.generated = int(self._a_gen[i])
+        if r.deadline is not None and r.t_finish > r.deadline:
+            self.slo_violations += 1
         self.kv.release(r.rid)
         self._used_sum -= int(self._a_used[i])
         self._drop_slot(i)
@@ -244,20 +401,38 @@ class SimEngine:
     def _decode_tick_ref(self):
         """Reference per-slot decode loop (exact sequential semantics)."""
         self._progress = False
+        sp = self.spec.speed
         i = 0
         while i < self._n_active:
+            if self._a_pref[i] > 0:
+                self._a_pref[i] -= 1    # prefill tick: no token emitted
+                self._progress = True
+                i += 1
+                continue
             r = self._slots[i]
+            emit = min(sp, int(self._a_tlen[i] - self._a_gen[i]))
+            if emit <= 0:
+                # degenerate zero-remaining request (true_len == generated,
+                # e.g. a directly-constructed true_len=0): finishes without
+                # emitting, matching the vectorized finished-mask semantics
+                self._progress = True
+                self._finish_slot(i)
+                continue
             res = int(self._a_res[i])
-            if self._a_plen[i] + self._a_gen[i] + 1 > res:
-                # outgrew reservation: grow or stall (overflow penalty)
-                if not self.kv.grow(r.rid, max(int(0.25 * res), 16)):
-                    i += 1
-                    continue  # stalled this tick, retries next tick
-                self._a_res[i] = self.kv.reserved[r.rid]
-                r.overflows += 1
-            self._a_gen[i] += 1
-            self._a_used[i] += 1
-            self._used_sum += 1
+            head = res - int(self._a_plen[i] + self._a_gen[i])
+            if emit > head:
+                # outgrew reservation: grow or emit what fits (overflow)
+                if self.kv.grow(r.rid, max(int(0.25 * res), 16, sp)):
+                    self._a_res[i] = self.kv.reserved[r.rid]
+                    r.overflows += 1
+                else:
+                    emit = head     # partial; 0 == stalled this tick
+            if emit <= 0:
+                i += 1
+                continue  # stalled on the reservation, retries next tick
+            self._a_gen[i] += emit
+            self._a_used[i] += emit
+            self._used_sum += emit
             self._progress = True
             if self._a_gen[i] >= self._a_tlen[i]:
                 self._finish_slot(i)
@@ -279,7 +454,8 @@ class SimEngine:
         v = self._n_active - 1
         victim = self._slots[v]
         victim.generated = int(self._a_gen[v])
-        ask = max(victim.reserve_len * 1.25, victim.generated + 16.0)
+        ask = max(victim.reserve_len * 1.25,
+                  victim.generated + float(max(16, self.spec.speed)))
         ask = min(ask, float(self.kv.budget_tokens - victim.prompt_len))
         self.kv.release(victim.rid)
         self._used_sum -= int(self._a_used[v])
@@ -298,14 +474,19 @@ class SimEngine:
         n = self._n_active
         if n == 0:
             return
-        if bool(np.any(self._a_plen[:n] + self._a_gen[:n] + 1
+        sp = self.spec.speed
+        pref = self._a_pref[:n] > 0
+        emit = np.where(pref, 0,
+                        np.minimum(sp, self._a_tlen[:n] - self._a_gen[:n]))
+        if bool(np.any(self._a_plen[:n] + self._a_gen[:n] + emit
                        > self._a_res[:n])):
             self._decode_tick_ref()
             return
         self._progress = True
-        self._a_gen[:n] += 1
-        self._a_used[:n] += 1
-        self._used_sum += n
+        self._a_pref[:n] -= pref
+        self._a_gen[:n] += emit
+        self._a_used[:n] += emit
+        self._used_sum += int(emit.sum())
         finished = self._a_gen[:n] >= self._a_tlen[:n]
         if bool(finished.any()):
             for off, i in enumerate(np.nonzero(finished)[0]):
@@ -336,19 +517,26 @@ class SimEngine:
 
     def ticks_to_event(self) -> float:
         """Ticks until the next tick that can admit, preempt, grow, complete,
-        or see an arrival become due. Every tick strictly before that is
-        provably eventless: active slots just emit one token each, so the
-        whole span can be advanced in closed form by :meth:`leap`."""
+        finish a prefill, expire a queued deadline, or see an arrival become
+        due. Every tick strictly before that is provably eventless: prefilling
+        slots burn one prefill tick, decoding slots emit ``speed`` tokens
+        each, so the whole span can be advanced in closed form by
+        :meth:`leap`."""
         k = np.inf
+        sp = self.spec.speed
         if self._future:
             # arrival due at the tick whose start time ≥ arrival
             k = min(k, max(1.0, np.ceil(self._future[0][0] - self.t) + 1.0))
         if self._ready:
             cand = self._ready[0][2]
-            if (self._n_active < self.max_slots
-                    and self.kv.can_admit(int(cand.prompt_len
-                                              + cand.reserve_len))):
+            need = int(cand.prompt_len + cand.reserve_len)
+            if need > self.kv.budget_tokens:
+                return 1.0   # unservable-head drop fires next tick
+            if self._n_active < self.max_slots and self.kv.can_admit(need):
                 return 1.0   # admission fires next tick
+            if cand.deadline is not None:
+                # head expires at the first tick with t > deadline
+                k = min(k, max(1.0, np.floor(cand.deadline - self.t) + 1.0))
             if self.policy.preempt and self._n_active:
                 n = self._n_active
                 rem = np.maximum(self._a_pred[:n] - self._a_gen[:n], 1.0)
@@ -357,30 +545,47 @@ class SimEngine:
                     return 1.0   # preemption fires next tick (monotone ↓)
         n = self._n_active
         if n:
-            k = min(k, float((self._a_tlen[:n] - self._a_gen[:n]).min()))
-            k = min(k, float((self._a_res[:n] - self._a_plen[:n]
-                              - self._a_gen[:n]).min() + 1))
+            pref = self._a_pref[:n]
+            prefilling = pref > 0
+            if bool(prefilling.any()):
+                # first decode tick of a prefilling slot is an event
+                k = min(k, float(pref[prefilling].min()) + 1.0)
+            if not bool(prefilling.all()):
+                dec = ~prefilling
+                rem = (self._a_tlen[:n] - self._a_gen[:n])[dec]
+                k = min(k, float(np.ceil(rem / sp).min()))       # completion
+                headroom = (self._a_res[:n] - self._a_plen[:n]
+                            - self._a_gen[:n])[dec]
+                k = min(k, float((headroom // sp).min() + 1))    # growth
         return max(k, 1.0)
 
     def leap(self, q: int):
         """Advance q provably-eventless ticks at once — bit-identical to q
-        calls of :meth:`step` (each active slot emits one token per tick; the
-        usage integral is the arithmetic series the per-tick loop would sum)."""
+        calls of :meth:`step` (each decoding slot emits ``speed`` tokens per
+        tick, each prefilling slot burns one prefill tick; the usage integral
+        is the arithmetic series the per-tick loop would sum)."""
         if q <= 0:
             return
         n = self._n_active
-        self._a_gen[:n] += q
-        self._a_used[:n] += q
-        self.kv.total_used_steps += q * self._used_sum + n * q * (q + 1) // 2
+        if n:
+            add = np.where(self._a_pref[:n] > 0, 0, self.spec.speed)
+            self._a_pref[:n] -= np.minimum(self._a_pref[:n], q)
+            gain = add * q
+            self._a_gen[:n] += gain
+            self._a_used[:n] += gain
+            rate = int(add.sum())   # decode tokens emitted per tick
+        else:
+            rate = 0
+        self.kv.total_used_steps += q * self._used_sum + rate * q * (q + 1) // 2
         self.kv.total_reserved_steps += q * self.kv.reserved_now
-        self._used_sum += n * q
+        self._used_sum += rate * q
         self.t += float(q)
 
     # -- closed-loop convenience --------------------------------------------
 
     def run(self, requests: List[Request], max_steps: int = 1_000_000) -> ServeStats:
         self.reset()
-        reqs = [Request(**{**r.__dict__}) for r in requests]  # defensive copy
+        reqs = [r.fresh_copy() for r in requests]  # defensive copy
         annotate_predictions(reqs, self.predictor, self.policy)
         self.submit(reqs)
         while not self.idle and self.t < max_steps:
@@ -406,6 +611,9 @@ class SimEngine:
             preemptions=self.preemptions,
             oom_evictions=self.oom_evictions,
             dropped=self.dropped,
+            timed_out=self.timed_out,
+            slo_violations=self.slo_violations,
+            goodput=_goodput(self._done, self.t),
             **_latency_stats(self._done),
         )
 

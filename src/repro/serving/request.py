@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -19,6 +20,7 @@ class Request:
     reserve_len: Optional[float] = None
     # trace provenance (cluster simulator)
     setting: Optional[str] = None       # "model/scenario" the law came from
+    deadline: Optional[float] = None    # absolute SLO: must finish by this step
     replica: Optional[int] = None       # router-assigned replica index
     # engine bookkeeping
     t_start: Optional[float] = None
@@ -33,6 +35,22 @@ class Request:
     @property
     def latency(self) -> float:
         return (self.t_finish - self.arrival) if self.t_finish is not None else np.inf
+
+    @property
+    def slo_met(self) -> bool:
+        """Finished, and within the deadline if one was set."""
+        if self.t_finish is None:
+            return False
+        return self.deadline is None or self.t_finish <= self.deadline
+
+    def fresh_copy(self) -> "Request":
+        """Copy for a new simulation run: identity/trace fields (including
+        any fields added later) carried over via :func:`dataclasses.replace`,
+        engine bookkeeping reset. ``phi`` stays shared — it is read-only for
+        the engine. This replaces the brittle ``Request(**r.__dict__)``
+        pattern, which silently breaks on non-init fields."""
+        return dataclasses.replace(self, replica=None, t_start=None,
+                                   t_finish=None, generated=0, overflows=0)
 
 
 def workload_from_scenario(

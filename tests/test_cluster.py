@@ -1,5 +1,8 @@
 """Cluster simulator: arrival traces, router/engine invariants, and the
-vectorized-vs-reference SimEngine regression."""
+vectorized-vs-reference SimEngine regression — including the heterogeneous
+(ReplicaSpec), prefill-cost, SLO/timeout, and work-stealing code paths."""
+
+import dataclasses
 
 import numpy as np
 import pytest
@@ -8,9 +11,10 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.data.lengths import LengthLaw, law_quantile, sample_lengths
 from repro.serving.arrivals import (LatentOracle, TraceConfig, arrival_times,
-                                    make_trace)
-from repro.serving.cluster import Cluster, ROUTERS
-from repro.serving.engine import SimEngine
+                                    make_trace, stable_rate_specs)
+from repro.serving.cluster import Cluster, ROUTERS, STEAL_MODES
+from repro.serving.engine import ReplicaSpec, SimEngine
+from repro.serving.request import Request
 from repro.serving.scheduler import Policy
 
 settings.register_profile("ci", deadline=None, max_examples=15)
@@ -132,11 +136,11 @@ class TestVectorizedRegression:
         reqs = _trace(200, pattern="bursty", rate=1.2, seed=11)
         oracle = LatentOracle()
         ra, fa = _row_and_finishes(
-            Cluster(3, 4, 2 * (256 + 512), QPOL, router=router,
-                    predictor=oracle, vectorized=True), reqs)
+            Cluster.uniform(3, 4, 2 * (256 + 512), QPOL, router=router,
+                            predictor=oracle, vectorized=True), reqs)
         rb, fb = _row_and_finishes(
-            Cluster(3, 4, 2 * (256 + 512), QPOL, router=router,
-                    predictor=oracle, vectorized=False), reqs)
+            Cluster.uniform(3, 4, 2 * (256 + 512), QPOL, router=router,
+                            predictor=oracle, vectorized=False), reqs)
         assert ra == rb
         assert fa == fb
 
@@ -157,8 +161,8 @@ class TestVectorizedRegression:
 class TestClusterInvariants:
     def _run(self, router="psq", n=600, seed=0):
         reqs = _trace(n, pattern="bursty", rate=1.5, seed=seed)
-        cl = Cluster(4, 4, 2 * (256 + 512), QPOL, router=router,
-                     predictor=LatentOracle())
+        cl = Cluster.uniform(4, 4, 2 * (256 + 512), QPOL, router=router,
+                             predictor=LatentOracle())
         stats = cl.run(reqs)
         return cl, stats, reqs
 
@@ -269,8 +273,8 @@ class TestDeadlockRecovery:
         pol = Policy("fcfs", "quantile", max_seq_len=512)
         st = SimEngine(4, 1000, pol, predictor=LatentOracle()).run([])
         assert st.completed == 0
-        cst = Cluster(2, 4, 1000, pol, router="psq",
-                      predictor=LatentOracle()).run([])
+        cst = Cluster.uniform(2, 4, 1000, pol, router="psq",
+                              predictor=LatentOracle()).run([])
         assert cst.completed == 0
 
 
@@ -280,12 +284,423 @@ class TestRouterQuality:
         concurrency than max-reserve, cutting p99 latency AND waste."""
         reqs = _trace(800, pattern="bursty", rate=1.2, seed=2,
                       model="mix", scenario="mix")
-        naive = Cluster(4, 8, 2 * (256 + 512),
-                        Policy("fcfs", "max", max_seq_len=512),
-                        router="round_robin",
-                        predictor=LatentOracle()).run(reqs)
-        prod = Cluster(4, 8, 2 * (256 + 512), QPOL, router="psq",
-                       predictor=LatentOracle()).run(reqs)
+        naive = Cluster.uniform(4, 8, 2 * (256 + 512),
+                                Policy("fcfs", "max", max_seq_len=512),
+                                router="round_robin",
+                                predictor=LatentOracle()).run(reqs)
+        prod = Cluster.uniform(4, 8, 2 * (256 + 512), QPOL, router="psq",
+                               predictor=LatentOracle()).run(reqs)
         assert prod.completed == naive.completed == len(reqs)
         assert prod.p99_latency < naive.p99_latency
         assert prod.kv_waste_ratio < naive.kv_waste_ratio
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous replicas, prefill cost, SLOs, and work stealing
+# ---------------------------------------------------------------------------
+
+HET_SPECS = (
+    ReplicaSpec(4, 2 * (256 + 512), speed=2, prefill_tokens_per_step=64),
+    ReplicaSpec(2, 256 + 512, speed=1, prefill_tokens_per_step=32),
+    ReplicaSpec(6, 3 * (256 + 512), speed=3),
+)
+
+
+def _feature_cluster(feat, vectorized, router="psq"):
+    kw = {}
+    if feat in ("steal", "steal_quantile", "all"):
+        kw = dict(rebalance_every=25,
+                  steal="quantile" if feat != "steal" else "tail")
+    specs = (HET_SPECS if feat in ("hetero", "all")
+             else (ReplicaSpec(4, 2 * (256 + 512),
+                               prefill_tokens_per_step=64),) * 3
+             if feat == "prefill" else (ReplicaSpec(4, 2 * (256 + 512)),) * 3)
+    return Cluster(specs, QPOL, router=router, predictor=LatentOracle(),
+                   vectorized=vectorized, **kw)
+
+
+class TestNewFeatureVecRegression:
+    """The event-leap fast path must stay bit-identical to the per-slot
+    reference on every new axis: prefill cost, heterogeneous specs,
+    deadlines/timeouts, and work stealing — separately and combined."""
+
+    @pytest.mark.parametrize("feat", ["prefill", "hetero", "steal",
+                                      "steal_quantile", "all"])
+    def test_cluster_vec_matches_ref_features(self, feat):
+        slo = dict(slo_factor=3.0, slo_floor=50.0) if feat in ("slo", "all") \
+            else {}
+        reqs = _trace(250, pattern="bursty", rate=1.5, seed=11, **slo)
+        ra, fa = _row_and_finishes(_feature_cluster(feat, True), reqs)
+        rb, fb = _row_and_finishes(_feature_cluster(feat, False), reqs)
+        assert ra == rb
+        assert fa == fb
+
+    @pytest.mark.parametrize("router", ROUTERS)
+    def test_cluster_vec_matches_ref_slo(self, router):
+        reqs = _trace(250, pattern="bursty", rate=2.0, seed=5,
+                      slo_factor=3.0, slo_floor=50.0)
+        ra, fa = _row_and_finishes(_feature_cluster("slo", True, router), reqs)
+        rb, fb = _row_and_finishes(_feature_cluster("slo", False, router), reqs)
+        assert ra == rb and fa == fb
+        assert ra["timed_out"] > 0      # the SLO path was actually exercised
+
+    @pytest.mark.parametrize("spec", [
+        ReplicaSpec(6, 3 * (256 + 512), speed=3, prefill_tokens_per_step=48),
+        ReplicaSpec(6, 3 * (256 + 512), speed=1, prefill_tokens_per_step=16),
+        ReplicaSpec(6, 3 * (256 + 512), speed=4),
+    ])
+    def test_engine_vec_matches_ref_speed_prefill(self, spec):
+        reqs = _trace(200, pattern="bursty", rate=1.2, seed=7,
+                      slo_factor=4.0, slo_floor=100.0)
+        pol = Policy("srtf_pred", "quantile", quantile=0.9, max_seq_len=512,
+                     preempt=True)
+        ra, fa = _row_and_finishes(
+            SimEngine(policy=pol, predictor=LatentOracle(), vectorized=True,
+                      spec=spec), reqs)
+        rb, fb = _row_and_finishes(
+            SimEngine(policy=pol, predictor=LatentOracle(), vectorized=False,
+                      spec=spec), reqs)
+        assert ra == rb and fa == fb
+
+    @given(st.integers(0, 10_000))
+    def test_engine_vec_matches_ref_random_features(self, seed):
+        rng = np.random.default_rng(seed)
+        spec = ReplicaSpec(int(rng.integers(2, 7)), 2 * (256 + 512),
+                           speed=int(rng.integers(1, 5)),
+                           prefill_tokens_per_step=int(rng.integers(0, 5))
+                           * 32)
+        reqs = _trace(60, pattern="poisson", rate=0.6, seed=seed,
+                      slo_factor=5.0, slo_floor=64.0)
+        pol = Policy("fcfs", "quantile", quantile=0.85, max_seq_len=512)
+        ra, fa = _row_and_finishes(
+            SimEngine(policy=pol, predictor=LatentOracle(), vectorized=True,
+                      spec=spec), reqs)
+        rb, fb = _row_and_finishes(
+            SimEngine(policy=pol, predictor=LatentOracle(), vectorized=False,
+                      spec=spec), reqs)
+        assert ra == rb and fa == fb
+
+    def test_golden_cluster_stats_deterministic(self):
+        """Same seed ⇒ the exact same ClusterStats row dict, twice over, on
+        the all-features configuration (hetero + SLO + stealing)."""
+        reqs = _trace(300, pattern="bursty", rate=1.5, seed=21,
+                      slo_factor=3.0, slo_floor=50.0)
+        rows = [Cluster(HET_SPECS, QPOL, router="psq",
+                        predictor=LatentOracle(), rebalance_every=40,
+                        steal="quantile").run(reqs).row() for _ in range(2)]
+        assert rows[0] == rows[1]
+        # and the run exercised every new subsystem
+        assert rows[0]["stolen"] > 0
+        assert rows[0]["timed_out"] > 0
+        assert rows[0]["completed"] + rows[0]["timed_out"] \
+            + rows[0]["dropped"] == len(reqs)
+
+
+class TestSLOAccounting:
+    def test_timeouts_and_violations_partition(self):
+        """Every request is exactly one of: completed in SLO, completed late
+        (slo_violation), timed out in queue, or dropped as unservable."""
+        reqs = _trace(500, pattern="bursty", rate=2.5, seed=4,
+                      slo_factor=2.0, slo_floor=30.0)
+        cl = Cluster(HET_SPECS, QPOL, router="psq", predictor=LatentOracle())
+        stats = cl.run(reqs)
+        done = [r for e in cl.engines for r in e.done]
+        timed = [r for e in cl.engines for r in e.timed_out_requests]
+        assert stats.completed == len(done)
+        assert stats.timed_out == len(timed) > 0
+        assert len(done) + len(timed) + stats.dropped == len(reqs)
+        late = sum(1 for r in done if not r.slo_met)
+        assert stats.slo_violations == late
+        for r in timed:
+            assert r.t_finish is None and r.deadline < stats.makespan
+        # goodput counts only within-SLO tokens, so it is below throughput
+        assert 0.0 < stats.goodput <= stats.throughput
+
+    def test_no_slo_means_no_timeouts(self):
+        reqs = _trace(300, pattern="bursty", rate=1.5, seed=4)
+        stats = Cluster(HET_SPECS, QPOL, router="psq",
+                        predictor=LatentOracle()).run(reqs)
+        assert stats.timed_out == 0 and stats.slo_violations == 0
+        assert stats.completed == len(reqs)
+        assert stats.goodput == pytest.approx(stats.throughput)
+
+    def test_trace_deadlines_per_class(self):
+        """Mixed traces give each model×scenario class its own SLO budget
+        (proportional to the class's typical length)."""
+        reqs = _trace(2000, model="mix", scenario="mix", slo_factor=2.0,
+                      slo_floor=10.0)
+        budgets = {}
+        for r in reqs:
+            budgets.setdefault(r.setting, set()).add(
+                round(r.deadline - r.arrival, 6))
+        assert len(budgets) == 8
+        for setting, b in budgets.items():
+            assert len(b) == 1, setting    # one budget per class
+        assert len({next(iter(b)) for b in budgets.values()}) > 1
+
+
+class TestPrefillCost:
+    def test_prefill_delays_first_token(self):
+        """With prefill cost, a request's finish is pushed back by exactly
+        ceil(prompt_len / rate) ticks relative to the free-prefill engine
+        (single request: no queueing interactions)."""
+        pol = Policy("fcfs", "quantile", max_seq_len=512)
+        r = Request(rid=0, arrival=0.0, prompt_len=100, true_len=50,
+                    reserve_len=64.0, predicted_len=50.0)
+        free = SimEngine(policy=pol, spec=ReplicaSpec(2, 4096)).run([r])
+        paid = SimEngine(policy=pol, spec=ReplicaSpec(
+            2, 4096, prefill_tokens_per_step=16)).run([r])
+        assert paid.mean_latency == free.mean_latency + int(np.ceil(100 / 16))
+
+    def test_speed_shrinks_makespan(self):
+        reqs = _trace(300, rate=1.0, seed=6)
+        pol = Policy("fcfs", "quantile", max_seq_len=512)
+        kv = 4 * (256 + 512)
+        slow = SimEngine(policy=pol, predictor=LatentOracle(),
+                         spec=ReplicaSpec(4, kv, speed=1)).run(reqs)
+        fast = SimEngine(policy=pol, predictor=LatentOracle(),
+                         spec=ReplicaSpec(4, kv, speed=4)).run(reqs)
+        assert fast.completed == slow.completed == len(reqs)
+        assert fast.makespan < slow.makespan
+        assert fast.mean_latency < slow.mean_latency
+
+    def test_replica_spec_validation(self):
+        with pytest.raises(ValueError):
+            ReplicaSpec(0, 100)
+        with pytest.raises(ValueError):
+            ReplicaSpec(2, 100, speed=0)
+        with pytest.raises(ValueError):
+            ReplicaSpec(2, 100, prefill_tokens_per_step=-1)
+
+
+class TestWorkStealing:
+    def _overloaded_cluster(self, steal=None, rebalance_every=0,
+                            router="round_robin"):
+        # slow small replica next to a fast big one: round_robin overloads
+        # the slow one, so there is real imbalance to steal away
+        specs = (ReplicaSpec(2, 256 + 512, speed=1),
+                 ReplicaSpec(8, 4 * (256 + 512), speed=3))
+        return Cluster(specs, QPOL, router=router, predictor=LatentOracle(),
+                       rebalance_every=rebalance_every,
+                       steal=steal or "tail")
+
+    def test_stealing_moves_queued_requests(self):
+        reqs = _trace(400, pattern="bursty", rate=2.0, seed=8)
+        st_off = self._overloaded_cluster().run(reqs)
+        st_on = self._overloaded_cluster(rebalance_every=20).run(reqs)
+        assert st_off.stolen == 0
+        assert st_on.stolen > 0
+        assert st_on.completed == st_off.completed == len(reqs)
+        assert st_on.p99_latency < st_off.p99_latency
+
+    @pytest.mark.parametrize("mode", STEAL_MODES)
+    def test_steal_preserves_requests(self, mode):
+        """No request is lost or duplicated by migration, and stolen ones
+        finish on their new replica."""
+        reqs = _trace(400, pattern="bursty", rate=2.0, seed=9)
+        cl = self._overloaded_cluster(steal=mode, rebalance_every=20)
+        stats = cl.run(reqs)
+        assert stats.stolen > 0
+        done = [r for e in cl.engines for r in e.done]
+        assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+        for e_idx, e in enumerate(cl.engines):
+            assert all(r.replica == e_idx for r in e.done)
+
+    def test_quantile_steal_moves_bigger_work(self):
+        """The ProD-aware selector migrates requests with larger predicted
+        quantile remaining work than the tail selector does."""
+        reqs = _trace(600, pattern="bursty", rate=2.5, seed=10)
+
+        def mean_stolen_reserve(mode):
+            specs = (ReplicaSpec(2, 256 + 512), ReplicaSpec(8, 4 * (256 + 512)))
+            cl = Cluster(specs, QPOL, router="jsq", predictor=LatentOracle(),
+                         rebalance_every=20, steal=mode)
+            moved = []
+            orig = SimEngine.steal_queued
+
+            def spy(self, k, mode="tail", fit=None):
+                out = orig(self, k, mode, fit)
+                moved.extend(float(r.reserve_len) for r in out)
+                return out
+
+            SimEngine.steal_queued = spy
+            try:
+                cl.run(reqs)
+            finally:
+                SimEngine.steal_queued = orig
+            return float(np.mean(moved)) if moved else 0.0
+
+        tail, quant = mean_stolen_reserve("tail"), mean_stolen_reserve("quantile")
+        assert quant > 0 and tail > 0
+        assert quant >= tail
+
+    def test_stealing_helps_hetero_slo(self):
+        """Acceptance: on a heterogeneous 4-replica fleet under SLO pressure,
+        psq+quantile with stealing beats round_robin on p99 latency AND SLO
+        violations."""
+        specs = (ReplicaSpec(8, 4 * (256 + 512), speed=2),
+                 ReplicaSpec(8, 4 * (256 + 512), speed=2),
+                 ReplicaSpec(4, 2 * (256 + 512), speed=1),
+                 ReplicaSpec(4, 2 * (256 + 512), speed=1))
+        probe = _trace(500, seed=12)
+        rate = stable_rate_specs(
+            specs, float(np.mean([r.true_len for r in probe])), load=0.85)
+        reqs = _trace(2000, pattern="bursty", rate=rate, seed=12,
+                      slo_factor=6.0, slo_floor=100.0)
+        rr = Cluster(specs, Policy("fcfs", "max", max_seq_len=512),
+                     router="round_robin", predictor=LatentOracle()).run(reqs)
+        prod = Cluster(specs, QPOL, router="psq", predictor=LatentOracle(),
+                       rebalance_every=50, steal="quantile").run(reqs)
+        assert prod.p99_latency < rr.p99_latency
+        assert prod.slo_violations + prod.timed_out \
+            < rr.slo_violations + rr.timed_out
+        assert prod.goodput > rr.goodput
+
+
+class TestRequestCopy:
+    def test_fresh_copy_round_trip(self):
+        """fresh_copy preserves every identity/trace field (including ones
+        added after the copy helper was written — it enumerates dataclass
+        fields), shares phi, and resets engine bookkeeping."""
+        r = Request(rid=7, arrival=3.5, prompt_len=64, true_len=200,
+                    phi=np.arange(4.0), predicted_len=180.0,
+                    reserve_len=220.0, setting="qwen/math", deadline=903.5,
+                    replica=2, t_start=10.0, t_finish=250.0, generated=200,
+                    overflows=3)
+        c = r.fresh_copy()
+        reset = dict(replica=None, t_start=None, t_finish=None, generated=0,
+                     overflows=0)
+        for f in dataclasses.fields(Request):
+            want = reset[f.name] if f.name in reset else getattr(r, f.name)
+            got = getattr(c, f.name)
+            if isinstance(want, np.ndarray):
+                assert got is want          # phi stays shared, not deep-copied
+            else:
+                assert got == want, f.name
+        assert c is not r
+
+    def test_run_does_not_mutate_caller_requests(self):
+        reqs = _trace(100, rate=1.5, seed=14, slo_factor=4.0, slo_floor=50.0)
+        before = [(r.rid, r.t_start, r.t_finish, r.generated, r.replica,
+                   r.reserve_len, r.deadline) for r in reqs]
+        Cluster(HET_SPECS, QPOL, router="psq", predictor=LatentOracle(),
+                rebalance_every=30).run(reqs)
+        after = [(r.rid, r.t_start, r.t_finish, r.generated, r.replica,
+                  r.reserve_len, r.deadline) for r in reqs]
+        assert before == after
+
+
+class TestUndersizedReplica:
+    def test_oversized_request_dropped_not_wedged(self):
+        """A queued request needing more KV than the replica's entire pool is
+        dropped when it surfaces, instead of head-of-line blocking forever."""
+        pol = Policy("fcfs", "quantile", max_seq_len=4096)
+        big = Request(rid=0, arrival=0.0, prompt_len=256, true_len=100,
+                      reserve_len=3000.0, predicted_len=100.0)
+        ok = Request(rid=1, arrival=1.0, prompt_len=16, true_len=50,
+                     reserve_len=100.0, predicted_len=50.0)
+        for vec in (True, False):
+            st = SimEngine(policy=pol, spec=ReplicaSpec(2, 1000),
+                           vectorized=vec).run([big, ok], max_steps=50_000)
+            assert st.dropped == 1
+            assert st.completed == 1
+            assert st.makespan < 10_000     # terminated, no max_steps spin
+
+    def test_router_avoids_undersized_replica(self):
+        """Load-aware routers never send a request to a replica whose whole
+        KV pool cannot hold it while a fitting replica exists — every
+        request completes even with a tiny replica in the fleet."""
+        specs = (ReplicaSpec(8, 8 * (256 + 512)), ReplicaSpec(2, 500))
+        reqs = _trace(200, rate=1.0, seed=3)
+        for router in ("jsq", "least_kv", "psq"):
+            st = Cluster(specs, QPOL, router=router,
+                         predictor=LatentOracle()).run(reqs)
+            assert st.completed == len(reqs), router
+            assert st.dropped == 0, router
+
+    def test_round_robin_vec_matches_ref_with_drops(self):
+        """round_robin stays capacity-blind, so oversized requests DO land on
+        the tiny replica and take the drop path — which must be bit-identical
+        between the vectorized and reference engines."""
+        specs = (ReplicaSpec(4, 2 * (256 + 512)), ReplicaSpec(2, 500))
+        reqs = _trace(250, pattern="bursty", rate=1.5, seed=11)
+        rows = {}
+        for vec in (True, False):
+            cl = Cluster(specs, QPOL, router="round_robin",
+                         predictor=LatentOracle(), vectorized=vec)
+            rows[vec] = cl.run(reqs).row()
+        assert rows[True] == rows[False]
+        assert rows[True]["dropped"] > 0
+        assert rows[True]["completed"] + rows[True]["dropped"] == len(reqs)
+
+    def test_steal_respects_thief_capacity(self):
+        """Stealing never migrates a request whose reservation need exceeds
+        the thief's whole KV pool."""
+        specs = (ReplicaSpec(8, 8 * (256 + 512), speed=1),
+                 ReplicaSpec(2, 500, speed=4))
+        reqs = _trace(300, pattern="bursty", rate=1.5, seed=6)
+        moved_needs = []
+        orig = SimEngine.steal_queued
+
+        def spy(self, k, mode="tail", fit=None):
+            out = orig(self, k, mode, fit)
+            moved_needs.extend(
+                (int(r.prompt_len + r.reserve_len), fit) for r in out)
+            return out
+
+        SimEngine.steal_queued = spy
+        try:
+            st = Cluster(specs, QPOL, router="psq", predictor=LatentOracle(),
+                         rebalance_every=20, steal="quantile").run(reqs)
+        finally:
+            SimEngine.steal_queued = orig
+        assert moved_needs                    # stealing actually happened
+        assert all(need <= fit for need, fit in moved_needs)
+        assert st.completed + st.dropped == len(reqs)
+
+
+class TestStealSizing:
+    def test_stealing_fires_under_normalized_imbalance(self):
+        """A fast replica next to a slow one with equal raw queue lengths is
+        still 4x less loaded per unit of service rate; the normalized steal
+        size must fire there (the raw (qd-qt)/2 rule silently no-ops)."""
+        specs = (ReplicaSpec(2, 2 * (256 + 512), speed=1),
+                 ReplicaSpec(8, 8 * (256 + 512), speed=4))
+        reqs = _trace(500, pattern="bursty", rate=2.0, seed=15)
+        off = Cluster(specs, QPOL, router="round_robin",
+                      predictor=LatentOracle()).run(reqs)
+        on = Cluster(specs, QPOL, router="round_robin",
+                     predictor=LatentOracle(), rebalance_every=20).run(reqs)
+        assert on.stolen > 0
+        assert on.completed == off.completed == len(reqs)
+        assert on.p99_latency < off.p99_latency
+        assert on.makespan < off.makespan
+        # NOTE: `balance` (max/mean tokens per replica) legitimately rises —
+        # near-equal token counts on 4x-unequal hardware were the pathology
+
+
+class TestDegenerateRequests:
+    def test_zero_length_request_finishes_identically_both_paths(self):
+        """A directly-constructed true_len=0 request (trace lengths are
+        clipped above 0) must finish immediately without emitting, in both
+        decode paths, instead of livelocking the reference loop."""
+        pol = Policy("fcfs", "quantile", max_seq_len=512)
+        rows = {}
+        for vec in (True, False):
+            reqs = [Request(rid=0, arrival=0.0, prompt_len=8, true_len=0,
+                            reserve_len=16.0, predicted_len=1.0),
+                    Request(rid=1, arrival=0.5, prompt_len=8, true_len=20,
+                            reserve_len=32.0, predicted_len=20.0)]
+            st = SimEngine(policy=pol, spec=ReplicaSpec(2, 1000),
+                           vectorized=vec).run(reqs, max_steps=5000)
+            rows[vec] = st.row()
+            assert st.completed == 2
+            assert st.makespan < 100
+        assert rows[True] == rows[False]
+
+    def test_engine_requires_policy_and_dims(self):
+        with pytest.raises(ValueError):
+            SimEngine(spec=ReplicaSpec(2, 1000))            # no policy
+        with pytest.raises(ValueError):
+            SimEngine(max_slots=2,
+                      policy=Policy("fcfs", "max"))          # no kv_budget

@@ -1,0 +1,122 @@
+"""Property-based invariants for the KV reservation allocator.
+
+Random reserve/grow/use/free/preempt op sequences, replayed against
+:class:`~repro.serving.kvcache.KVCacheManager` with a shadow model, must
+never exceed the pool, never corrupt the scalar counter on double-free, and
+keep the usage integral below the reservation integral — the invariants the
+engine's waste metric and admission control rest on. Runs under real
+``hypothesis`` when installed, else the seeded example sweep in
+``tests/_hypothesis_compat.py``.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.serving.kvcache import KVCacheManager
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+BUDGET = 1000
+
+
+def _apply_ops(rng: np.random.Generator, n_ops: int, budget: int = BUDGET):
+    """Engine-shaped random op stream: admit / grow / use (within the
+    reservation, as the engine guarantees) / release / tick. Yields the
+    manager after every op so the caller can assert invariants."""
+    kv = KVCacheManager(budget_tokens=budget)
+    live = []
+    next_rid = 0
+    for _ in range(n_ops):
+        op = int(rng.integers(0, 5))
+        if op == 0:                                   # admit
+            need = int(rng.integers(1, budget // 2))
+            if kv.admit(next_rid, need):
+                live.append(next_rid)
+            next_rid += 1
+        elif op == 1 and live:                        # grow
+            rid = live[int(rng.integers(0, len(live)))]
+            kv.grow(rid, int(rng.integers(1, 200)))
+        elif op == 2 and live:                        # use within reservation
+            rid = live[int(rng.integers(0, len(live)))]
+            room = kv.reserved[rid] - kv.used.get(rid, 0)
+            if room > 0:
+                kv.use(rid, int(rng.integers(1, room + 1)))
+        elif op == 3 and live:                        # release (preempt/finish)
+            rid = live.pop(int(rng.integers(0, len(live))))
+            kv.release(rid)
+        else:                                         # tick: integrals advance
+            kv.tick()
+        yield kv, live
+
+
+class TestKVCacheProperties:
+    @given(st.integers(0, 100_000), st.integers(20, 120))
+    def test_pool_never_exceeded_and_counters_consistent(self, seed, n_ops):
+        rng = np.random.default_rng(seed)
+        for kv, live in _apply_ops(rng, n_ops):
+            assert 0 <= kv.reserved_now <= kv.budget_tokens
+            assert kv.reserved_now == sum(kv.reserved.values())
+            assert set(kv.reserved) == set(live)
+            assert kv.peak_reserved <= kv.budget_tokens
+            assert kv.reserved_now <= kv.peak_reserved
+            for rid, used in kv.used.items():
+                assert 0 <= used <= kv.reserved[rid]
+
+    @given(st.integers(0, 100_000), st.integers(20, 120))
+    def test_usage_integral_bounded_by_reservation_integral(self, seed, n_ops):
+        """total_used_steps <= total_reserved_steps at every point: a token
+        can only be used inside a reservation, so the per-tick usage sum can
+        never exceed the per-tick reservation sum."""
+        rng = np.random.default_rng(seed)
+        for kv, _ in _apply_ops(rng, n_ops):
+            assert kv.total_used_steps <= kv.total_reserved_steps
+            assert 0.0 <= kv.waste_ratio <= 1.0
+
+    @given(st.integers(0, 100_000))
+    def test_double_free_is_harmless(self, seed):
+        """Releasing a rid twice (or one never admitted) must not corrupt the
+        scalar counter or go negative — the engine relies on release being
+        idempotent across preempt/evict races."""
+        rng = np.random.default_rng(seed)
+        kv = KVCacheManager(budget_tokens=BUDGET)
+        rids = []
+        for rid in range(8):
+            if kv.admit(rid, int(rng.integers(1, 200))):
+                rids.append(rid)
+        before = kv.reserved_now
+        assert before == sum(kv.reserved.values())
+        victim = rids[int(rng.integers(0, len(rids)))]
+        kv.release(victim)
+        after_first = kv.reserved_now
+        kv.release(victim)                 # double free
+        kv.release(10_000)                 # never admitted
+        assert kv.reserved_now == after_first == sum(kv.reserved.values())
+        assert kv.reserved_now >= 0
+
+    @given(st.integers(0, 100_000))
+    def test_admit_and_grow_refuse_over_budget_atomically(self, seed):
+        """A refused admit/grow leaves no partial state behind."""
+        rng = np.random.default_rng(seed)
+        kv = KVCacheManager(budget_tokens=BUDGET)
+        assert kv.admit(0, int(rng.integers(BUDGET // 2, BUDGET + 1)))
+        snapshot = (kv.reserved_now, dict(kv.reserved), kv.overflow_events)
+        assert not kv.admit(1, BUDGET)     # cannot fit
+        assert not kv.grow(0, BUDGET)      # cannot fit either
+        assert (kv.reserved_now, dict(kv.reserved),
+                kv.overflow_events) == snapshot
+        assert 1 not in kv.reserved and 1 not in kv.used
+
+    def test_release_all_returns_pool_to_empty(self):
+        kv = KVCacheManager(budget_tokens=BUDGET)
+        for rid in range(6):
+            kv.admit(rid, 100)
+            kv.use(rid, 40)
+        kv.tick()
+        for rid in range(6):
+            kv.release(rid)
+        assert kv.reserved_now == 0
+        assert kv.reserved == {} and kv.used == {}
+        assert kv.total_used_steps <= kv.total_reserved_steps

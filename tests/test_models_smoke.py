@@ -1,6 +1,8 @@
 """Per-architecture smoke tests: REDUCED config (2 layers, d_model<=512,
 <=4 experts), one forward/train step + prefill/decode coherence on CPU."""
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +12,24 @@ from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.models.model_zoo import Runtime, build_model, last_token_hidden
 
 RT = Runtime.local()
+
+
+@functools.lru_cache(maxsize=None)
+def _reduced_model(arch):
+    """One build+init per arch, shared across this module's tests — param
+    init was re-paid three times per arch and is pure given the fixed key."""
+    cfg = get_config(arch).reduced().with_overrides(dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_prefill(arch):
+    """Jit-cached prefill per arch: XLA-compiling the 2-layer graph once is
+    cheaper than eager op-by-op dispatch, and reuses across tests."""
+    _, m, _ = _reduced_model(arch)
+    return jax.jit(lambda p, b: m.prefill(p, b, RT))
 
 
 def _batch_for(cfg, key, B, S):
@@ -27,12 +47,10 @@ def _batch_for(cfg, key, B, S):
 
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
 def test_reduced_train_step(arch):
-    cfg = get_config(arch).reduced().with_overrides(dtype="float32")
+    cfg, m, params = _reduced_model(arch)
     assert cfg.n_layers == 2 and cfg.d_model <= 512
     if cfg.family == "moe":
         assert cfg.n_experts <= 4
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(0))
     B, S = 2, 16
     batch = _batch_for(cfg, jax.random.PRNGKey(1), B, S)
     # one jitted value_and_grad: XLA-compiling the 2-layer graph is several
@@ -47,12 +65,10 @@ def test_reduced_train_step(arch):
 
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
 def test_reduced_prefill_shapes_and_phi(arch):
-    cfg = get_config(arch).reduced().with_overrides(dtype="float32")
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(0))
+    cfg, m, params = _reduced_model(arch)
     B, S = 2, 12
     batch = _batch_for(cfg, jax.random.PRNGKey(1), B, S)
-    logits, hidden, cache, aux = m.prefill(params, batch, RT)
+    logits, hidden, cache, aux = _jit_prefill(arch)(params, batch)
     assert hidden.shape == (B, S, cfg.d_model)
     assert logits.shape == (B, S, cfg.vocab_size)
     phi = last_token_hidden(hidden, jnp.full((B,), S))
@@ -65,9 +81,7 @@ def test_reduced_prefill_shapes_and_phi(arch):
                                   "whisper-large-v3", "qwen2-vl-2b"])
 def test_decode_matches_forward(arch):
     """prefill(S) + decode_step(token S) == forward(S+1) at position S."""
-    cfg = get_config(arch).reduced().with_overrides(dtype="float32")
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(0))
+    cfg, m, params = _reduced_model(arch)
     B, S = 2, 20
     key = jax.random.PRNGKey(1)
     toks = jax.random.randint(key, (B, S + 1), 1, cfg.vocab_size)
@@ -81,8 +95,9 @@ def test_decode_matches_forward(arch):
         from repro.models.rope import text_mrope_positions
         full["positions"] = text_mrope_positions(B, S + 1)
         pre["positions"] = text_mrope_positions(B, S)
-    lg_full, _, _, _ = m.prefill(params, full, RT)
-    _, _, cache, _ = m.prefill(params, pre, RT)
+    jp = _jit_prefill(arch)
+    lg_full, _, _, _ = jp(params, full)
+    _, _, cache, _ = jp(params, pre)
 
     def grow(x):
         if x.ndim >= 3 and x.shape[-3] == S:

@@ -17,12 +17,12 @@ from repro.core.predictor import train_predictor
 from repro.data import make_scenario
 
 
-@pytest.fixture(scope="module")
+@pytest.fixture(scope="session")
 def scenario():
     return make_scenario("qwen", "math", n_train=500, n_test=250, seed=3)
 
 
-@pytest.fixture(scope="module")
+@pytest.fixture(scope="session")
 def pcfg(scenario):
     bm = float(np.quantile(scenario.len_train, 0.999) * 1.3)
     # hidden=256 halves head-training time; every assertion here is relative
@@ -30,26 +30,39 @@ def pcfg(scenario):
     return PredictorConfig(n_bins=48, bin_max=bm, epochs=15, hidden=256)
 
 
-def test_predictor_learns(scenario, pcfg):
+@pytest.fixture(scope="session")
+def median_head(scenario, pcfg):
+    """One trained ProD-M (median-target) head shared by every test that
+    needs a trained predictor — retraining per test dominated tier-1 time."""
     edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
     tgt = T.median_target(jnp.asarray(scenario.len_train, jnp.float32), edges)
-    p = train_predictor(jax.random.PRNGKey(0),
-                        jnp.asarray(scenario.phi_train["last"]), tgt, pcfg, edges)
-    pred = p.predict(jnp.asarray(scenario.phi_test["last"]))
+    return train_predictor(jax.random.PRNGKey(0),
+                           jnp.asarray(scenario.phi_train["last"]), tgt,
+                           pcfg, edges)
+
+
+@pytest.fixture(scope="session")
+def dist_head(scenario, pcfg):
+    """One trained ProD-D (distributional) head, shared likewise."""
+    edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
+    tgt = T.dist_target(jnp.asarray(scenario.len_train, jnp.float32), edges)
+    return train_predictor(jax.random.PRNGKey(0),
+                           jnp.asarray(scenario.phi_train["last"]), tgt,
+                           pcfg, edges)
+
+
+def test_predictor_learns(scenario, pcfg, median_head):
+    pred = median_head.predict(jnp.asarray(scenario.phi_test["last"]))
     med = T.sample_median(jnp.asarray(scenario.len_test, jnp.float32))
     m = mae(pred, med)
     const = mae(jnp.full_like(med, float(jnp.median(med))), med)
     assert m < 0.9 * const, f"predictor ({m:.1f}) should beat constant ({const:.1f})"
 
 
-def test_predictor_quantiles_monotone(scenario, pcfg):
-    edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
-    tgt = T.dist_target(jnp.asarray(scenario.len_train, jnp.float32), edges)
-    p = train_predictor(jax.random.PRNGKey(0),
-                        jnp.asarray(scenario.phi_train["last"]), tgt, pcfg, edges)
+def test_predictor_quantiles_monotone(scenario, dist_head):
     phi = jnp.asarray(scenario.phi_test["last"][:32])
-    q50 = np.asarray(p.quantile(phi, 0.5))
-    q90 = np.asarray(p.quantile(phi, 0.9))
+    q50 = np.asarray(dist_head.quantile(phi, 0.5))
+    q90 = np.asarray(dist_head.quantile(phi, 0.9))
     assert (q90 >= q50 - 1e-6).all()
 
 
@@ -100,18 +113,12 @@ def test_constant_median_mae_matches_definition(scenario, pcfg):
     assert res.test_mae == pytest.approx(want, rel=1e-3)
 
 
-def test_predictor_checkpoint_roundtrip(tmp_path, scenario, pcfg):
+def test_predictor_checkpoint_roundtrip(tmp_path, scenario, pcfg, median_head):
     """LengthPredictor params survive checkpointing (serving restarts)."""
-    import jax.numpy as jnp
-    from repro.core import bins as B, targets as T
-    from repro.core.predictor import LengthPredictor, train_predictor
+    from repro.core.predictor import LengthPredictor
     from repro.training.checkpoint import restore_checkpoint, save_checkpoint
 
-    edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
-    tgt = T.median_target(jnp.asarray(scenario.len_train, jnp.float32), edges)
-    p = train_predictor(jax.random.PRNGKey(0),
-                        jnp.asarray(scenario.phi_train["last"]), tgt, pcfg,
-                        edges)
+    p = median_head
     path = save_checkpoint(str(tmp_path), {"head": p.params, "edges": p.edges})
     back = restore_checkpoint(path, {"head": p.params, "edges": p.edges})
     p2 = LengthPredictor(params=back["head"], edges=back["edges"], pcfg=pcfg)
