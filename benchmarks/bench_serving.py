@@ -1,15 +1,21 @@
 """Serving impact (beyond-paper, §4 motivation): what does ProD-quality length
 prediction buy the scheduler?
 
-Two tracks:
+Tracks:
 
-* ``run``          — single replica, head TRAINED on scenario features:
+* ``run``            — single replica, head TRAINED on scenario features:
   FCFS/max-reserve (vLLM-naive) vs ProD-driven SJF + quantile reservation vs
   the oracle upper bound, under a KV-memory-bound regime.
-* ``run_cluster``  — cluster scale: a ≥50k-request heavy-tailed open-loop
+* ``run_cluster``    — cluster scale: a ≥50k-request heavy-tailed open-loop
   trace (all eight model×scenario laws) replayed across N SimEngine replicas
   under router × reservation policies, with the LatentOracle standing in for
   the ProD head. Prints per-policy makespan / p50 / p99 / KV-waste.
+* ``run_cluster_hetero`` — heterogeneous fleet × per-class SLOs × work
+  stealing.
+* ``run_cluster_predictors`` — predictor-in-the-loop: the TRAINED ProD-D
+  head (batched jitted inference at dispatch, via ``PredictorService``)
+  vs the analytic ``LatentOracle`` vs the zero-error ``PerfectOracle``,
+  crossed with FCFS / EDF / least-laxity queue orderings under SLOs.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--cluster-only]
 """
@@ -25,8 +31,21 @@ from repro.serving.arrivals import (LatentOracle, TraceConfig, make_trace,
                                     stable_rate_specs)
 from repro.serving.cluster import Cluster
 from repro.serving.engine import ReplicaSpec, SimEngine
+from repro.serving.predictor import (PerfectOracle, PredictorService,
+                                     fit_trace_head)
 from repro.serving.request import workload_from_scenario
 from repro.serving.scheduler import Policy
+
+
+def make_oracle(cfg: TraceConfig) -> LatentOracle:
+    """Shared LatentOracle construction seam for every cluster table.
+
+    The oracle reads each request's noise-corrupted latents directly, so its
+    only coupling to ``cfg`` is implicit (the trace's ``view`` noise); keeping
+    one factory makes that coupling — and any future oracle configuration —
+    a single-line change instead of N copies."""
+    del cfg  # trace-level coupling is carried by the requests' features
+    return LatentOracle()
 
 POLICIES = (
     Policy("fcfs", "max", max_seq_len=2048),
@@ -137,7 +156,7 @@ def run_cluster(n_requests=50_000, n_replicas=4, max_slots=32,
         print(f"  {'router':12s} {'policy':20s} {'makespan':>9s} {'p50':>8s} "
               f"{'p99':>9s} {'waste':>6s} {'ovf':>6s} {'bal':>5s} {'secs':>6s}")
     kv_budget = 8 * (256 + 4096)     # per replica: 8 full max-reservations
-    oracle = LatentOracle()
+    oracle = make_oracle(cfg)
     rows = []
     for router, pol in CLUSTER_MATRIX:
         t0 = time.time()
@@ -239,7 +258,7 @@ def run_cluster_hetero(n_requests=50_000, max_slots=32, pattern="bursty",
         print(f"  {'router':12s} {'policy':16s} {'steal':>12s} {'p50':>8s} "
               f"{'p99':>9s} {'viol':>6s} {'t/o':>6s} {'goodput':>8s} "
               f"{'stolen':>7s} {'secs':>6s}")
-    oracle = LatentOracle()
+    oracle = make_oracle(cfg)
     rows = []
     for router, pol, reb, steal in HETERO_MATRIX:
         t0 = time.time()
@@ -283,8 +302,112 @@ def validate_cluster_hetero(rows) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# predictor-in-the-loop: trained ProD-D head vs oracle proxies × orderings
+# ---------------------------------------------------------------------------
+
+ORDER_MATRIX = ("fcfs", "edf", "laxity")
+
+
+def run_cluster_predictors(n_requests=50_000, n_replicas=4, max_slots=32,
+                           pattern="bursty", load=0.7, slo_factor=10.0,
+                           slo_floor=300.0, seed=0, n_train=4000,
+                           verbose=True):
+    """The paper's head in the serving path: replay one SLO-carrying trace
+    under predictor ∈ {LatentOracle (analytic proxy), trained ProD-D head
+    (batched jitted dispatch-time inference), PerfectOracle (upper bound)}
+    × ordering ∈ {fcfs, edf, laxity}, all with psq routing + q0.9 quantile
+    reservation. The trained head is fit on repeated-generation targets from
+    the same calibrated laws (never on the served trace)."""
+    probe = make_trace(TraceConfig(n_requests=2000, rate=1.0, seed=seed))
+    rate = stable_rate(n_replicas, max_slots, mean_true_length(probe), load)
+    cfg = TraceConfig(n_requests=n_requests, rate=rate, pattern=pattern,
+                      model="mix", scenario="mix", seed=seed,
+                      slo_factor=slo_factor, slo_floor=slo_floor)
+    t0 = time.time()
+    reqs = make_trace(cfg)
+    if not reqs:
+        print("empty trace (n_requests=0): nothing to replay")
+        return []
+    t_trace = time.time() - t0
+    t0 = time.time()
+    head = fit_trace_head(cfg, n_train=n_train, r=16, seed=seed + 7)
+    t_train = time.time() - t0
+    if verbose:
+        print(f"predictor trace: {n_requests} requests ({pattern}, rate "
+              f"{rate:.3f}/step, SLO = arrival + {slo_floor:.0f} + "
+              f"{slo_factor:.0f}x class median) built in {t_trace:.1f}s; "
+              f"ProD-D head trained on {n_train}x16 repeated draws "
+              f"in {t_train:.1f}s")
+        print(f"  {'predictor':14s} {'order':8s} {'p50':>8s} {'p99':>9s} "
+              f"{'viol':>6s} {'t/o':>6s} {'goodput':>8s} {'waste':>6s} "
+              f"{'secs':>6s}")
+    kv_budget = 8 * (256 + 4096)
+    predictors = (
+        ("latent-oracle", lambda: make_oracle(cfg)),
+        ("trained-prod-d", lambda: PredictorService(head, window=16.0)),
+        ("perfect", lambda: PerfectOracle()),
+    )
+    rows = []
+    for pname, make_pred in predictors:
+        for order in ORDER_MATRIX:
+            pol = Policy(order, "quantile", quantile=0.9, max_seq_len=4096)
+            pred = make_pred()
+            t0 = time.time()
+            st = Cluster.uniform(n_replicas, max_slots, kv_budget, pol,
+                                 router="psq", predictor=pred).run(reqs)
+            dt = time.time() - t0
+            row = st.row()
+            row.update(predictor=pname, order=order, seconds=dt)
+            if isinstance(pred, PredictorService):
+                row["service"] = pred.stats.row()
+            rows.append(row)
+            if verbose:
+                print(f"  {pname:14s} {order:8s} {st.p50_latency:8.1f} "
+                      f"{st.p99_latency:9.1f} {st.slo_violations:6d} "
+                      f"{st.timed_out:6d} {st.goodput:8.2f} "
+                      f"{st.kv_waste_ratio:6.3f} {dt:6.1f}")
+    if verbose:
+        srow = next(r["service"] for r in rows if "service" in r)
+        print(f"  service: {srow['batches']} fused batches, mean batch "
+              f"{srow['mean_batch']:.1f}, hit rate {srow['hit_rate']:.3f}, "
+              f"buckets {srow['buckets']}")
+    return rows
+
+
+def validate_cluster_predictors(rows) -> dict:
+    if not rows:
+        return {"empty_trace": True}
+    by = {(r["predictor"], r["order"]): r for r in rows}
+
+    def bad(r):
+        return r["slo_violations"] + r["timed_out"]
+
+    trained_f = by[("trained-prod-d", "fcfs")]
+    trained_l = by[("trained-prod-d", "laxity")]
+    trained_e = by[("trained-prod-d", "edf")]
+    oracle_f = by[("latent-oracle", "fcfs")]
+    perfect_f = by[("perfect", "fcfs")]
+    deadline_best = min(bad(trained_e), bad(trained_l))
+    srow = trained_f.get("service", {})
+    return {
+        "trained_head_in_loop": srow.get("batches", 0) > 0,
+        "service_mean_batch": srow.get("mean_batch", 0.0),
+        "perfect_is_bound_p99": perfect_f["p99_latency"]
+        <= trained_f["p99_latency"] * 1.05,
+        "trained_within_2x_oracle_p99": trained_f["p99_latency"]
+        <= 2.0 * oracle_f["p99_latency"],
+        "trained_p99_vs_oracle_x": trained_f["p99_latency"]
+        / max(oracle_f["p99_latency"], 1e-9),
+        "deadline_order_cuts_slo_misses": deadline_best < bad(trained_f),
+        "deadline_slo_gain_x": bad(trained_f) / max(deadline_best, 1e-9),
+        "replay_under_90s": all(r["seconds"] < 90.0 for r in rows),
+    }
+
+
 def main(fast=True, cluster=True, cluster_only=False, n_requests=50_000,
-         n_replicas=4, max_slots=32, pattern="bursty", seed=0, hetero=True):
+         n_replicas=4, max_slots=32, pattern="bursty", seed=0, hetero=True,
+         predictors=True):
     rows = None
     if not cluster_only:
         rows = run(fast=fast)
@@ -297,6 +420,12 @@ def main(fast=True, cluster=True, cluster_only=False, n_requests=50_000,
         hrows = run_cluster_hetero(n_requests=n_requests, max_slots=max_slots,
                                    pattern=pattern, seed=seed)
         print("hetero checks:", validate_cluster_hetero(hrows))
+    if predictors and (cluster or cluster_only):
+        prows = run_cluster_predictors(n_requests=n_requests,
+                                       n_replicas=n_replicas,
+                                       max_slots=max_slots, pattern=pattern,
+                                       seed=seed)
+        print("predictor checks:", validate_cluster_predictors(prows))
     return rows
 
 
@@ -307,6 +436,8 @@ if __name__ == "__main__":
     ap.add_argument("--cluster-only", action="store_true")
     ap.add_argument("--no-hetero", action="store_true",
                     help="skip the heterogeneous x SLO x stealing table")
+    ap.add_argument("--no-predictors", action="store_true",
+                    help="skip the trained-head vs oracles x ordering table")
     ap.add_argument("--n-requests", type=int, default=50_000)
     ap.add_argument("--n-replicas", type=int, default=4)
     ap.add_argument("--max-slots", type=int, default=32)
@@ -316,4 +447,5 @@ if __name__ == "__main__":
     args = ap.parse_args()
     main(cluster_only=args.cluster_only, n_requests=args.n_requests,
          n_replicas=args.n_replicas, max_slots=args.max_slots,
-         pattern=args.pattern, seed=args.seed, hetero=not args.no_hetero)
+         pattern=args.pattern, seed=args.seed, hetero=not args.no_hetero,
+         predictors=not args.no_predictors)

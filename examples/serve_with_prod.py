@@ -11,7 +11,11 @@ Pipeline (all real, no stubs):
      comparing FCFS/max-reserve vs ProD-driven SJF + quantile reservation;
   5. replay the same workload across a 2-replica cluster, comparing the
      load-blind round-robin/max-reserve router against the ProD-aware
-     predicted-shortest-queue router with quantile KV reservation.
+     predicted-shortest-queue router with quantile KV reservation;
+  6. put the trained head IN the dispatch loop: a PredictorService batches
+     the head over arrival windows (one jitted fused call per window) and
+     the cluster orders its queues by EDF / least-laxity on the predicted
+     q0.9 remaining work.
 
     PYTHONPATH=src python examples/serve_with_prod.py [--train-steps 300]
 """
@@ -34,6 +38,7 @@ from repro.data.tokenizer import N_TOPICS, ToyTokenizer
 from repro.models.model_zoo import Runtime, build_model
 from repro.serving.cluster import Cluster
 from repro.serving.engine import RealEngine, ReplicaSpec, SimEngine
+from repro.serving.predictor import PredictorService
 from repro.serving.request import Request
 from repro.serving.scheduler import Policy
 from repro.training.trainer import train_loop
@@ -55,12 +60,12 @@ def main():
     tcfg = TrainConfig(lr=3e-3, warmup_steps=10, decay_steps=args.train_steps,
                        seed=args.seed)
     ds = make_lm_dataset(2048, 96, seed=args.seed)
-    print(f"[1/5] training tiny-lm for {args.train_steps} steps ...")
+    print(f"[1/6] training tiny-lm for {args.train_steps} steps ...")
     state = train_loop(model, tcfg, batch_iterator(ds, 16, seed=args.seed),
                        args.train_steps, rt=Runtime.local(), log_every=100)
 
     # -- 2. repeated-sampling data collection --------------------------------
-    print(f"[2/5] collecting {args.r} generations x {args.n_prompts} prompts ...")
+    print(f"[2/6] collecting {args.r} generations x {args.n_prompts} prompts ...")
     eng = RealEngine(model, state.params, max_new=args.max_new, temperature=0.8)
     rng = np.random.default_rng(args.seed)
     tok = ToyTokenizer()
@@ -76,7 +81,7 @@ def main():
           f"noise radius={nr:.2f}  ({time.time()-t0:.0f}s)")
 
     # -- 3. train the ProD-D head on REAL hidden states ----------------------
-    print("[3/5] training ProD-D head on the served model's hidden states ...")
+    print("[3/6] training ProD-D head on the served model's hidden states ...")
     pcfg = PredictorConfig(n_bins=24, bin_max=float(lens.max() + 8), epochs=40,
                            batch_size=32)
     edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
@@ -89,7 +94,7 @@ def main():
           f"(noise radius {nr:.2f})")
 
     # -- 4. serve a fresh workload with ProD scheduling ----------------------
-    print(f"[4/5] serving {args.n_serve} batched requests ...")
+    print(f"[4/6] serving {args.n_serve} batched requests ...")
     arrivals = np.cumsum(rng.exponential(1.5, args.n_serve))
     fresh = rng.integers(0, args.n_prompts, args.n_serve)
     reqs = []
@@ -109,14 +114,16 @@ def main():
     # -- 5. heterogeneous cluster replay with the trained ProD head ----------
     # a fast large replica next to a slow small one, per-request SLOs, and
     # periodic ProD-aware work stealing: the full prediction-aware stack
-    print("[5/5] replaying across a heterogeneous 2-replica cluster "
+    print("[5/6] replaying across a heterogeneous 2-replica cluster "
           "(speed 2x+1x, SLOs, work stealing) ...")
     specs = (ReplicaSpec(4, 2 * (6 + args.max_new), speed=2,
                          prefill_tokens_per_step=8),
              ReplicaSpec(2, 6 + args.max_new, speed=1,
                          prefill_tokens_per_step=4))
-    for r in reqs:
-        r.deadline = r.arrival + 3.0 * args.max_new   # per-request SLO
+    # tiered SLOs: alternate interactive (tight) / standard / batch (loose)
+    # classes, so deadline-aware orderings have real urgency differences
+    for i, r in enumerate(reqs):
+        r.deadline = r.arrival + (2.0 + 2.0 * (i % 3)) * args.max_new
     for router, pol, reb in (
             ("round_robin", Policy("fcfs", "max", max_seq_len=args.max_new),
              0),
@@ -131,8 +138,27 @@ def main():
               f"viol={st.slo_violations} t/o={st.timed_out} "
               f"goodput={st.goodput:.2f} stolen={st.stolen} "
               f"balance={st.balance:.2f}")
+
+    # -- 6. predictor service in the dispatch loop ---------------------------
+    # the SAME trained head, now served through the batched jitted
+    # PredictorService, driving deadline-aware queue orderings
+    print("[6/6] predictor-in-the-loop: batched dispatch-time inference + "
+          "deadline-aware ordering ...")
+    for order in ("fcfs", "edf", "laxity"):
+        svc = PredictorService(pred, window=8.0)
+        pol = Policy(order, "quantile", quantile=0.9,
+                     max_seq_len=args.max_new)
+        st = Cluster(specs, pol, router="psq", predictor=svc,
+                     rebalance_every=25, steal="quantile").run(reqs)
+        srow = svc.stats.row()
+        print(f"      order={order:7s} p50={st.p50_latency:7.1f} "
+              f"p99={st.p99_latency:7.1f} viol={st.slo_violations} "
+              f"t/o={st.timed_out} goodput={st.goodput:.2f} "
+              f"[{srow['batches']} fused batches, mean "
+              f"{srow['mean_batch']:.1f} reqs, hit rate {srow['hit_rate']:.2f}]")
     print("done — ProD scheduling/routing/stealing vs prediction-blind "
-          "baselines shown above.")
+          "baselines shown above; stage 6 serves the trained head itself "
+          "at dispatch time.")
 
 
 if __name__ == "__main__":

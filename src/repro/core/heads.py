@@ -51,3 +51,25 @@ def head_predict(
         )
         return med
     return decode_probs(head_probs(params, phi), edges, how)
+
+
+def head_quantiles(
+    params: Dict[str, jax.Array],
+    phi: jax.Array,
+    edges: jax.Array,
+    qs,
+    impl: str = "auto",
+):
+    """Fused distributional inference: one head evaluation returning the full
+    histogram AND every requested predictive quantile.
+
+    ``qs`` is a sequence of CDF levels (include 0.5 to get the median).
+    Returns ``(probs (B, K), quants (B, len(qs)))`` — quantiles use the same
+    CDF-crossing + in-bin interpolation decode as the fused median, so
+    ``head_quantiles(..., qs=[0.5])[1][:, 0] == head_predict(..., "median")``.
+    This is the one call :class:`~repro.serving.predictor.PredictorService`
+    makes per dispatch batch."""
+    return ops.prod_head(
+        phi, params["w1"], params["b1"], params["w2"], params["b2"], edges,
+        qs=jnp.asarray(qs, jnp.float32), impl=impl,
+    )

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.common.config import PredictorConfig
 from repro.core import bins as bins_mod
-from repro.core.heads import head_init, head_logits, head_predict, head_probs
+from repro.core.heads import (head_init, head_logits, head_predict,
+                              head_probs, head_quantiles)
 from repro.core.losses import soft_ce
 from repro.training.optim import adamw, Optimizer
 from repro.common.config import TrainConfig
@@ -36,11 +37,24 @@ class LengthPredictor:
         return head_probs(self.params, phi)
 
     def quantile(self, phi: jax.Array, q: float) -> jax.Array:
-        """Predictive-distribution quantile (used for KV reservation)."""
+        """Predictive-distribution quantile (used for KV reservation).
+
+        Conservative right-edge decode: returns the upper edge of the bin
+        where the CDF crosses ``q`` (never under-reserves within the bin).
+        For the interpolated variant see :meth:`quantiles`."""
         probs = self.predict_dist(phi)
         cdf = jnp.cumsum(probs, axis=-1)
         k = jnp.argmax(cdf >= q, axis=-1)
         return self.edges[k + 1]
+
+    def quantiles(self, phi: jax.Array, qs, impl: str = "auto"):
+        """Fused histogram + interpolated quantiles in ONE head evaluation.
+
+        ``qs``: sequence of CDF levels. Returns ``(probs (B, K),
+        quants (B, len(qs)))`` via the fused kernel path — what the serving
+        :class:`~repro.serving.predictor.PredictorService` calls per dispatch
+        batch instead of one :meth:`quantile` pass per level."""
+        return head_quantiles(self.params, phi, self.edges, qs, impl=impl)
 
 
 def train_predictor(

@@ -72,9 +72,11 @@ def ssd_scan(x, dt, a, Bm, Cm, *, chunk=128, impl="auto"):
     return y[:, :S], h
 
 
-def prod_head(phi, w1, b1, w2, b2, edges, *, block_b=128, impl="auto"):
+def prod_head(phi, w1, b1, w2, b2, edges, *, qs=None, block_b=128, impl="auto"):
+    """Fused head. ``qs=None`` returns (probs, median); ``qs`` an array of
+    CDF levels returns (probs, quants (B, Q)) — all levels in one call."""
     impl = _resolve(impl)
     if impl == "xla":
-        return ref.prod_head_ref(phi, w1, b1, w2, b2, edges)
-    return prod_head_pallas(phi, w1, b1, w2, b2, edges, block_b=block_b,
+        return ref.prod_head_ref(phi, w1, b1, w2, b2, edges, qs=qs)
+    return prod_head_pallas(phi, w1, b1, w2, b2, edges, qs=qs, block_b=block_b,
                             interpret=(impl == "interpret"))

@@ -1,11 +1,14 @@
 """Pallas TPU fused ProD predictor head (the paper's inference-path addition).
 
 One kernel fuses: 2-layer MLP (d -> hidden -> K bins) + softmax + the
-median-of-predictive-distribution decode (CDF 0.5 crossing with in-bin linear
-interpolation, §2.4). Runs on the served model's last hidden state during
-prefill — fusing it keeps the paper's "no additional inference cost" claim
-honest: one VMEM-resident matmul pair per request, no HBM round-trips for
-intermediates.
+quantile-of-predictive-distribution decode (CDF crossing with in-bin linear
+interpolation, §2.4 — the median is the q=0.5 special case). Runs on the
+served model's last hidden state during prefill — fusing it keeps the paper's
+"no additional inference cost" claim honest: one VMEM-resident matmul pair
+per request, no HBM round-trips for intermediates. The serving-layer
+:class:`~repro.serving.predictor.PredictorService` asks for several quantiles
+(median for routing, q0.9 for laxity, the policy quantile for KV reservation)
+in the same fused call.
 
 Grid ``(n_batch_blocks,)`` with full weight panels resident in VMEM
 (d ≤ 7168, hidden = 512, K ≤ 64 → ≤ ~8 MB in bf16).
@@ -21,7 +24,7 @@ from jax.experimental import pallas as pl
 
 
 def _prod_head_kernel(phi_ref, w1_ref, b1_ref, w2_ref, b2_ref, edges_ref,
-                      probs_ref, med_ref):
+                      qs_ref, probs_ref, quant_ref):
     phi = phi_ref[...].astype(jnp.float32)            # (bb, d)
     h = jnp.maximum(
         jax.lax.dot_general(phi, w1_ref[...].astype(jnp.float32),
@@ -39,19 +42,20 @@ def _prod_head_kernel(phi_ref, w1_ref, b1_ref, w2_ref, b2_ref, edges_ref,
     probs_ref[...] = probs
 
     cdf = jnp.cumsum(probs, axis=-1)                   # (bb, K)
-    crossed = cdf >= 0.5
     K = probs.shape[-1]
-    idx = jax.lax.broadcasted_iota(jnp.int32, crossed.shape, 1)
-    k_star = jnp.min(jnp.where(crossed, idx, K - 1), axis=-1)      # (bb,)
-    onehot = (idx == k_star[:, None]).astype(jnp.float32)
-    p_k = jnp.sum(probs * onehot, axis=-1)
-    cdf_k = jnp.sum(cdf * onehot, axis=-1)
+    qs = qs_ref[...].astype(jnp.float32)               # (Q,)
+    crossed = cdf[:, None, :] >= qs[None, :, None]     # (bb, Q, K)
+    idx = jax.lax.broadcasted_iota(jnp.int32, crossed.shape, 2)
+    k_star = jnp.min(jnp.where(crossed, idx, K - 1), axis=-1)      # (bb, Q)
+    onehot = (idx == k_star[..., None]).astype(jnp.float32)
+    p_k = jnp.sum(probs[:, None, :] * onehot, axis=-1)             # (bb, Q)
+    cdf_k = jnp.sum(cdf[:, None, :] * onehot, axis=-1)
     cdf_prev = cdf_k - p_k
-    t = jnp.clip((0.5 - cdf_prev) / jnp.maximum(p_k, 1e-12), 0.0, 1.0)
+    t = jnp.clip((qs[None, :] - cdf_prev) / jnp.maximum(p_k, 1e-12), 0.0, 1.0)
     edges = edges_ref[...].astype(jnp.float32)          # (K+1,)
-    left = jnp.sum(edges[None, :K] * onehot, axis=-1)
-    right = jnp.sum(edges[None, 1 : K + 1] * onehot, axis=-1)
-    med_ref[...] = (left + t * (right - left))[:, None]
+    left = jnp.sum(edges[None, None, :K] * onehot, axis=-1)
+    right = jnp.sum(edges[None, None, 1 : K + 1] * onehot, axis=-1)
+    quant_ref[...] = left + t * (right - left)
 
 
 def prod_head_pallas(
@@ -62,10 +66,18 @@ def prod_head_pallas(
     b2: jax.Array,
     edges: jax.Array,     # (K+1,)
     *,
+    qs: jax.Array = None,  # (Q,) CDF levels; None -> median only
     block_b: int = 128,
     interpret: bool = False,
 ):
-    """Returns (probs (B, K) fp32, median (B,) fp32)."""
+    """Fused MLP + softmax + interpolated CDF-crossing decode.
+
+    Returns ``(probs (B, K) fp32, median (B,) fp32)`` when ``qs`` is None
+    (the original single-quantile shape), else ``(probs, quants (B, Q))``
+    with one column per requested CDF level."""
+    single = qs is None
+    qs = jnp.array([0.5], jnp.float32) if single else jnp.asarray(qs, jnp.float32)
+    Q = qs.shape[0]
     B, d = phi.shape
     hidden = w1.shape[1]
     K = w2.shape[1]
@@ -75,7 +87,7 @@ def prod_head_pallas(
         phi = jnp.pad(phi, ((0, pad), (0, 0)))
     nb = (B + pad) // block_b
 
-    probs, med = pl.pallas_call(
+    probs, quants = pl.pallas_call(
         _prod_head_kernel,
         grid=(nb,),
         in_specs=[
@@ -85,15 +97,18 @@ def prod_head_pallas(
             pl.BlockSpec((hidden, K), lambda i: (0, 0)),
             pl.BlockSpec((K,), lambda i: (0,)),
             pl.BlockSpec((K + 1,), lambda i: (0,)),
+            pl.BlockSpec((Q,), lambda i: (0,)),
         ],
         out_specs=[
             pl.BlockSpec((block_b, K), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, Q), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B + pad, K), jnp.float32),
-            jax.ShapeDtypeStruct((B + pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B + pad, Q), jnp.float32),
         ],
         interpret=interpret,
-    )(phi, w1, b1, w2, b2, edges)
-    return probs[:B], med[:B, 0]
+    )(phi, w1, b1, w2, b2, edges, qs)
+    if single:
+        return probs[:B], quants[:B, 0]
+    return probs[:B], quants[:B]

@@ -97,27 +97,42 @@ def prod_head_ref(
     w2: jax.Array,        # (hidden, K)
     b2: jax.Array,        # (K,)
     edges: jax.Array,     # (K+1,) bin edges
+    qs: Optional[jax.Array] = None,   # (Q,) CDF levels; None -> median only
 ) -> Tuple[jax.Array, jax.Array]:
     """ProD predictor head (paper §2.4): 2-layer MLP -> softmax over K bins
-    -> median of the predictive distribution with in-bin linear interpolation.
+    -> CDF-crossing quantile decode with in-bin linear interpolation.
 
-    Returns (probs (B, K) fp32, median_estimate (B,) fp32).
+    Returns (probs (B, K) fp32, median_estimate (B,) fp32) when ``qs`` is
+    None, else (probs, quants (B, Q) fp32) — one column per CDF level.
     """
     with jax.named_scope("fusedkernel_prod_head"):
-        return _prod_head_body(phi, w1, b1, w2, b2, edges)
+        return _prod_head_body(phi, w1, b1, w2, b2, edges, qs)
 
 
-def _prod_head_body(phi, w1, b1, w2, b2, edges):
+def _prod_head_body(phi, w1, b1, w2, b2, edges, qs=None):
+    single = qs is None
+    qs = jnp.array([0.5], jnp.float32) if single else jnp.asarray(qs, jnp.float32)
     h = jax.nn.relu(phi.astype(jnp.float32) @ w1.astype(jnp.float32) + b1.astype(jnp.float32))
     logits = h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     cdf = jnp.cumsum(probs, axis=-1)
-    k_star = jnp.argmax(cdf >= 0.5, axis=-1)                      # first crossing
-    cdf_prev = jnp.where(k_star > 0,
-                         jnp.take_along_axis(cdf, jnp.maximum(k_star - 1, 0)[:, None],
-                                             axis=-1)[:, 0], 0.0)
-    p_k = jnp.take_along_axis(probs, k_star[:, None], axis=-1)[:, 0]
-    t = jnp.clip((0.5 - cdf_prev) / jnp.maximum(p_k, 1e-12), 0.0, 1.0)
+    K = probs.shape[-1]
+    crossed = cdf[:, None, :] >= qs[None, :, None]                # (B, Q, K)
+    # first crossing, clamped to the last bin when float32 rounding keeps the
+    # CDF below q (q→1) — same rule as the Pallas kernel, so impls agree
+    k_star = jnp.min(jnp.where(crossed, jnp.arange(K)[None, None, :], K - 1),
+                     axis=-1)
+    cdf_prev = jnp.where(
+        k_star > 0,
+        jnp.take_along_axis(cdf[:, None, :].repeat(qs.shape[0], 1),
+                            jnp.maximum(k_star - 1, 0)[..., None],
+                            axis=-1)[..., 0], 0.0)
+    p_k = jnp.take_along_axis(probs[:, None, :].repeat(qs.shape[0], 1),
+                              k_star[..., None], axis=-1)[..., 0]
+    t = jnp.clip((qs[None, :] - cdf_prev) / jnp.maximum(p_k, 1e-12), 0.0, 1.0)
     left = edges[k_star]
     right = edges[k_star + 1]
-    return probs, left + t * (right - left)
+    quants = left + t * (right - left)
+    if single:
+        return probs, quants[:, 0]
+    return probs, quants

@@ -1,18 +1,23 @@
 """Serving substrate: requests, KV-cache reservation accounting, schedulers,
-continuous-batching engines (discrete-event simulator + real tiny-LM), and
-the open-loop multi-replica cluster simulator (arrival traces + routers)."""
+continuous-batching engines (discrete-event simulator + real tiny-LM), the
+open-loop multi-replica cluster simulator (arrival traces + routers), and the
+dispatch-time predictor service that puts the trained ProD-D head in the
+loop. See ``docs/serving.md`` for the guide."""
 
-from repro.serving.arrivals import (LatentOracle, TraceConfig, make_trace,
-                                    stable_rate_specs)
+from repro.serving.arrivals import (LatentOracle, TraceConfig, corrupt_latents,
+                                    make_trace, stable_rate_specs)
 from repro.serving.cluster import Cluster, ClusterStats, ROUTERS, STEAL_MODES
 from repro.serving.engine import ReplicaSpec, ServeStats, SimEngine
 from repro.serving.kvcache import KVCacheManager
+from repro.serving.predictor import (PerfectOracle, PredictorService,
+                                     ServiceStats, fit_trace_head)
 from repro.serving.request import Request, workload_from_scenario
-from repro.serving.scheduler import Policy
+from repro.serving.scheduler import ORDERINGS, Policy
 
 __all__ = [
-    "Cluster", "ClusterStats", "KVCacheManager", "LatentOracle", "Policy",
-    "ROUTERS", "ReplicaSpec", "Request", "STEAL_MODES", "ServeStats",
-    "SimEngine", "TraceConfig", "make_trace", "stable_rate_specs",
-    "workload_from_scenario",
+    "Cluster", "ClusterStats", "KVCacheManager", "LatentOracle", "ORDERINGS",
+    "PerfectOracle", "Policy", "PredictorService", "ROUTERS", "ReplicaSpec",
+    "Request", "STEAL_MODES", "ServeStats", "ServiceStats", "SimEngine",
+    "TraceConfig", "corrupt_latents", "fit_trace_head", "make_trace",
+    "stable_rate_specs", "workload_from_scenario",
 ]

@@ -33,6 +33,29 @@ from repro.serving.request import Request
 
 @dataclass(frozen=True)
 class TraceConfig:
+    """Open-loop trace specification: arrivals × length laws × SLOs.
+
+    Parameters
+    ----------
+    n_requests : trace length.
+    pattern : arrival process — ``poisson`` | ``bursty`` (2-state MMPP) |
+        ``diurnal`` (sinusoidally thinned); see module docstring.
+    rate : long-run mean arrivals per engine step (all patterns normalize
+        to it).
+    model, scenario : which calibrated length law(s) draw decode lengths —
+        a single setting or ``"mix"`` over all of them.
+    seed : one seed drives arrivals, latents, lengths, and feature noise —
+        traces are fully deterministic.
+    prompt_min, prompt_max : uniform prompt-length range (KV admission cost).
+    max_seq_len : serve cap; decode lengths are clipped to it.
+    view : predictor probe view (``last``/``mean``/``proxy``/``entropy``) —
+        sets the feature-noise level requests carry (see
+        :func:`~repro.data.scenarios.feature_sigma`).
+    slo_factor, slo_floor : per-class SLOs — deadline = arrival + slo_floor
+        + slo_factor × the class law's median scale. Both 0 disables SLOs.
+    burst_* : bursty-pattern shape; diurnal_* : diurnal-pattern shape.
+    """
+
     n_requests: int = 50_000
     pattern: str = "poisson"        # poisson | bursty | diurnal
     rate: float = 1.0               # mean arrivals per engine step
@@ -133,6 +156,21 @@ def arrival_times(cfg: TraceConfig, rng: np.random.Generator) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def corrupt_latents(rng: np.random.Generator, lat: np.ndarray, spec,
+                    view: str) -> np.ndarray:
+    """Noise-corrupt clean length-law latents into predictor features.
+
+    Adds ``feature_sigma(spec, view)``-scaled Gaussian noise to the log-median
+    coordinate — the paper's feature-informativeness calibration (chat ≫
+    math; last > mean > proxy > entropy). This one helper defines the feature
+    distribution BOTH the trace generator (request φ) and
+    :func:`~repro.serving.predictor.fit_trace_head` (training features) draw
+    from, so the trained head is never evaluated off-distribution."""
+    noisy = lat.copy()
+    noisy[:, 0] += feature_sigma(spec, view) * rng.standard_normal(len(lat))
+    return noisy
+
+
 def make_trace(cfg: TraceConfig) -> List[Request]:
     """Build an open-loop request trace: Poisson/bursty/diurnal arrivals with
     heavy-tailed prompt-conditioned lengths from the calibrated scenario laws.
@@ -155,10 +193,7 @@ def make_trace(cfg: TraceConfig) -> List[Request]:
         spec = get_spec(model, scen)
         lat = sample_prompt_latents(rng, spec.law, len(idx))
         true_len[idx] = sample_lengths(rng, lat, 1, spec.law)[:, 0]
-        noisy = lat.copy()
-        noisy[:, 0] += feature_sigma(spec, cfg.view) * rng.standard_normal(
-            len(idx))
-        phi[idx] = noisy
+        phi[idx] = corrupt_latents(rng, lat, spec, cfg.view)
         slo_budget[idx] = cfg.slo_floor + cfg.slo_factor * spec.law.median_scale
     true_len = np.minimum(true_len, cfg.max_seq_len)
     plen = rng.integers(cfg.prompt_min, cfg.prompt_max, size=n)
@@ -180,6 +215,12 @@ def make_trace(cfg: TraceConfig) -> List[Request]:
 class LatentOracle:
     """Trace-scale ProD-predictor proxy: predicts from each request's
     (noise-corrupted) length-law latents instead of a trained head.
+
+    One of the three interchangeable predictors behind the cluster's
+    ``predictor=`` seam — the analytic proxy, bracketed by the trained
+    :class:`~repro.serving.predictor.PredictorService` (the paper's actual
+    head) and the zero-error
+    :class:`~repro.serving.predictor.PerfectOracle`.
 
     ``predict`` returns the body median exp(log m̃) — the ProD-M point
     estimate — and ``quantile`` inverts the full body+tail mixture CDF at the

@@ -83,7 +83,28 @@ class ClusterStats:
 
 
 class Cluster:
-    """N-replica trace-driven cluster simulator over per-replica specs."""
+    """N-replica trace-driven cluster simulator over per-replica specs.
+
+    Parameters
+    ----------
+    specs : one :class:`~repro.serving.engine.ReplicaSpec` per replica
+        (slots, KV budget, decode speed, prefill rate) — the fleet.
+    policy : scheduling :class:`~repro.serving.scheduler.Policy` every
+        replica runs (queue ordering × KV reservation sizing).
+    router : dispatch policy, one of :data:`ROUTERS` (module docstring).
+    predictor : the length predictor behind the prediction-aware paths
+        (psq routing, quantile reservation, laxity ordering, quantile
+        stealing). Interchangeable implementations of the same seam:
+        :class:`~repro.serving.arrivals.LatentOracle` (analytic trace proxy),
+        :class:`~repro.serving.predictor.PredictorService` (trained ProD-D
+        head, batched jitted dispatch-time inference), and
+        :class:`~repro.serving.predictor.PerfectOracle` (realized lengths —
+        the upper bound). ``None`` keeps pre-annotated trace predictions.
+    vectorized : use the NumPy fast path + event leap (bit-identical to the
+        per-slot reference; ``False`` forces the reference loop).
+    rebalance_every : steal queued work every k steps (0 disables).
+    steal : victim selection, one of :data:`STEAL_MODES`.
+    """
 
     def __init__(self, specs: Sequence[ReplicaSpec], policy: Policy,
                  router: str = "round_robin", predictor=None,

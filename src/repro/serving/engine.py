@@ -39,18 +39,23 @@ import numpy as np
 
 from repro.serving.kvcache import KVCacheManager
 from repro.serving.request import Request
-from repro.serving.scheduler import (Policy, annotate_predictions,
-                                     predicted_remaining)
+from repro.serving.scheduler import (Policy, annotate_predictions, order_key,
+                                     predicted_remaining, quantile_remaining)
 
 
 @dataclass(frozen=True)
 class ReplicaSpec:
     """Per-replica capacity: what a heterogeneous cluster varies.
 
-    ``speed`` is an integer decode multiplier: every active (non-prefilling)
-    slot emits ``speed`` tokens per engine step. ``prefill_tokens_per_step``
-    is how many prompt tokens one prefill tick processes; 0 keeps the legacy
-    model where admission is free and the first decode token is immediate.
+    Parameters
+    ----------
+    max_slots : concurrent decode slots (continuous-batching width).
+    kv_budget : KV-cache pool size in tokens; reservations draw from it.
+    speed : integer decode multiplier — every active (non-prefilling) slot
+        emits ``speed`` tokens per engine step (a faster accelerator).
+    prefill_tokens_per_step : prompt tokens one prefill tick processes; an
+        admitted slot spends ``ceil(prompt / rate)`` ticks prefilling before
+        its first decode token. 0 keeps the legacy free-prefill model.
     """
     max_slots: int
     kv_budget: int
@@ -125,9 +130,11 @@ class SimEngine:
     Scheduling semantics per :meth:`step`:
 
     1. *admit*: drop expired queue heads (``timed_out``), then pop ready
-       requests in policy order while a slot and KV reservation budget are
-       available (head-of-line blocks on memory). An admitted slot first
-       spends its prefill ticks (see :class:`ReplicaSpec`) emitting nothing;
+       requests in policy order — FCFS/SJF/SRTF or the deadline-aware EDF /
+       least-laxity orderings (see :mod:`repro.serving.scheduler`) — while a
+       slot and KV reservation budget are available (head-of-line blocks on
+       memory). An admitted slot first spends its prefill ticks (see
+       :class:`ReplicaSpec`) emitting nothing;
     2. *preempt* (SRTF policies): the ready request with the shortest
        predicted remaining length evicts the longest-remaining active slot
        when the gap exceeds ``preempt_factor`` (progress is kept);
@@ -190,14 +197,7 @@ class SimEngine:
     # -- queue ---------------------------------------------------------------
 
     def _order_key(self, r: Request) -> float:
-        o = self.policy.order
-        if o == "fcfs":
-            return float(r.arrival)
-        if o in ("sjf_pred", "srtf_pred"):
-            return predicted_remaining(r)
-        if o == "sjf_oracle":
-            return float(r.true_len)
-        raise ValueError(o)
+        return order_key(r, self.policy.order)
 
     def _push_ready(self, r: Request):
         self._seq += 1
@@ -275,9 +275,7 @@ class SimEngine:
             return []
         if mode == "quantile":
             def keyf(e):
-                base = (e[2].reserve_len if e[2].reserve_len is not None
-                        else predicted_remaining(e[2]))
-                return (float(base) - e[2].generated, e[1])
+                return (quantile_remaining(e[2]), e[1])
         else:   # 'tail': largest policy key = served last
             keyf = None
         idx = sorted(range(len(self._ready)),
@@ -584,6 +582,18 @@ class SimEngine:
     # -- closed-loop convenience --------------------------------------------
 
     def run(self, requests: List[Request], max_steps: int = 1_000_000) -> ServeStats:
+        """Closed-loop single-replica replay: annotate, submit, step to idle.
+
+        Parameters
+        ----------
+        requests : the workload; defensively copied (:meth:`Request.fresh_copy`)
+            and annotated via the engine's ``predictor`` + ``policy``, so the
+            caller's objects are never mutated and re-runs are reproducible.
+        max_steps : hard tick cap (guards pathological non-termination).
+
+        Returns a :class:`ServeStats` row; per-request outcomes stay on
+        :attr:`done` / :attr:`timed_out_requests`.
+        """
         self.reset()
         reqs = [r.fresh_copy() for r in requests]  # defensive copy
         annotate_predictions(reqs, self.predictor, self.policy)

@@ -18,6 +18,11 @@ class Request:
     phi: Optional[np.ndarray] = None    # served-LLM hidden state (predictor input)
     predicted_len: Optional[float] = None
     reserve_len: Optional[float] = None
+    # distributional predictions (attached by a PredictorService at dispatch);
+    # pred_q is the q0.9 total decode length — the remaining-work signal that
+    # least-laxity ordering and quantile work stealing consume
+    pred_q: Optional[float] = None
+    pred_probs: Optional[np.ndarray] = None  # predictive histogram over bins
     # trace provenance (cluster simulator)
     setting: Optional[str] = None       # "model/scenario" the law came from
     deadline: Optional[float] = None    # absolute SLO: must finish by this step

@@ -1,5 +1,19 @@
-"""Schedulers: FCFS, SJF on predicted length, and the uncertainty-aware
-quantile policy that only a distributional predictor (ProD-D) enables.
+"""Schedulers: FCFS, SJF on predicted length, deadline-aware orderings, and
+the uncertainty-aware quantile policy that only a distributional predictor
+(ProD-D) enables.
+
+Orderings:
+* ``fcfs``       — arrival order
+* ``sjf_pred``   — shortest predicted remaining length first
+* ``sjf_oracle`` — shortest realized length first (upper bound)
+* ``srtf_pred``  — sjf_pred + preemption of the longest-remaining active slot
+* ``edf``        — earliest deadline first (requests without a deadline run
+                   FCFS after all deadline-carrying ones)
+* ``laxity``     — least laxity first, laxity = deadline − now − predicted
+                   q0.9 remaining work. Since ``now`` is common to every
+                   queued entry at any comparison instant, ordering by the
+                   static key ``deadline − q0.9-remaining`` IS the least-
+                   laxity order — no time-dependent re-keying needed.
 
 Reservation policies:
 * ``max``       — reserve max_seq_len (vLLM-naive; zero overflow, max waste)
@@ -19,11 +33,29 @@ import numpy as np
 
 from repro.serving.request import Request
 
+ORDERINGS = ("fcfs", "sjf_pred", "sjf_oracle", "srtf_pred", "edf", "laxity")
+RESERVES = ("max", "predicted", "quantile", "oracle")
+
 
 @dataclass(frozen=True)
 class Policy:
-    order: str = "fcfs"            # fcfs | sjf_pred | sjf_oracle | srtf_pred
-    reserve: str = "max"           # max | predicted | quantile | oracle
+    """Scheduling policy: queue ordering × KV reservation sizing.
+
+    Parameters
+    ----------
+    order : one of :data:`ORDERINGS` (see module docstring).
+    reserve : one of :data:`RESERVES` — how much KV to reserve per request.
+    margin : multiplier on the predicted median for ``reserve="predicted"``.
+    quantile : CDF level for ``reserve="quantile"``.
+    max_seq_len : serve-time length cap; reservations clamp to it.
+    preempt : SRTF only — evict the longest-remaining active slot when a much
+        shorter request waits.
+    preempt_factor : preempt only if the victim's predicted remaining exceeds
+        this multiple of the newcomer's.
+    """
+
+    order: str = "fcfs"            # see ORDERINGS
+    reserve: str = "max"           # see RESERVES
     margin: float = 1.2            # multiplier for `predicted`
     quantile: float = 0.9
     max_seq_len: int = 4096
@@ -37,16 +69,43 @@ def predicted_remaining(r: Request) -> float:
     return max(base - r.generated, 1.0)
 
 
+def quantile_remaining(r: Request) -> float:
+    """Predicted q0.9 remaining work — the pessimistic remaining-tokens signal
+    least-laxity ordering and quantile work stealing budget against.
+
+    Prefers the PredictorService-attached ``pred_q`` (true q0.9), falls back
+    to the reservation size (a quantile under ``reserve="quantile"``), then
+    to the point prediction."""
+    if r.pred_q is not None:
+        base = float(r.pred_q)
+    elif r.reserve_len is not None:
+        base = float(r.reserve_len)
+    else:
+        base = predicted_remaining(r) + r.generated
+    return max(base - r.generated, 1.0)
+
+
 def annotate_predictions(requests: List[Request], predictor, policy: Policy):
     """Attach predicted median + reservation length from the ProD head.
 
-    ``predictor`` is anything with ``predict(phi) -> median`` and
-    ``quantile(phi, q)`` over stacked per-request features — the trained
-    :class:`~repro.core.predictor.LengthPredictor` or the trace-level
-    :class:`~repro.serving.arrivals.LatentOracle`. Without a predictor,
-    requests pre-annotated by a trace generator keep their predictions;
-    anything else falls back to max/oracle reservation."""
+    ``predictor`` is any of the interchangeable predictors behind the cluster
+    ``predictor=`` seam:
+
+    * an object with ``annotate(requests, policy)`` — the batched, jitted
+      :class:`~repro.serving.predictor.PredictorService` (trained ProD-D
+      head) or the :class:`~repro.serving.predictor.PerfectOracle`; it is
+      delegated to wholesale;
+    * an object with ``predict(phi) -> median`` and ``quantile(phi, q)`` over
+      stacked per-request features — the trained
+      :class:`~repro.core.predictor.LengthPredictor` or the trace-level
+      :class:`~repro.serving.arrivals.LatentOracle`;
+    * ``None`` — requests pre-annotated by a trace generator keep their
+      predictions; anything else falls back to max/oracle reservation.
+    """
     if not requests:
+        return
+    if predictor is not None and hasattr(predictor, "annotate"):
+        predictor.annotate(requests, policy)
         return
     if predictor is None:
         for r in requests:
@@ -76,15 +135,31 @@ def annotate_predictions(requests: List[Request], predictor, policy: Policy):
         r.reserve_len = float(min(max(rv, 8.0), policy.max_seq_len))
 
 
+def order_key(r: Request, order: str) -> float:
+    """Static heap key realizing ``order`` (FIFO tie-break happens outside).
+
+    EDF keys on the absolute deadline; least-laxity keys on
+    ``deadline − q0.9-remaining`` (see module docstring for why the static
+    key is exact). Requests without a deadline key to +inf under both — they
+    run FIFO after every deadline-carrying request."""
+    if order == "fcfs":
+        return float(r.arrival)
+    if order in ("sjf_pred", "srtf_pred"):
+        return predicted_remaining(r)
+    if order == "sjf_oracle":
+        return float(r.true_len)
+    if order == "edf":
+        return float(r.deadline) if r.deadline is not None else float("inf")
+    if order == "laxity":
+        if r.deadline is None:
+            return float("inf")
+        return float(r.deadline) - quantile_remaining(r)
+    raise ValueError(order)
+
+
 def pick_next(queue: List[Request], policy: Policy, now: float) -> Optional[int]:
     """Index into `queue` of the next request to admit (arrived ones only)."""
     avail = [i for i, r in enumerate(queue) if r.arrival <= now]
     if not avail:
         return None
-    if policy.order == "fcfs":
-        return min(avail, key=lambda i: queue[i].arrival)
-    if policy.order in ("sjf_pred", "srtf_pred"):
-        return min(avail, key=lambda i: predicted_remaining(queue[i]))
-    if policy.order == "sjf_oracle":
-        return min(avail, key=lambda i: queue[i].true_len)
-    raise ValueError(policy.order)
+    return min(avail, key=lambda i: (order_key(queue[i], policy.order), i))

@@ -1,0 +1,71 @@
+"""Docs can't silently rot: every ```python fence in docs/*.md + README.md
+must at least be valid Python (compile check), and every intra-repo link or
+backticked file path must point at something that exists."""
+
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+
+FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.S)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backticked repo paths: `docs/serving.md`, `src/repro/core/`, `pytest.ini`…
+TICKED_PATH_RE = re.compile(
+    r"`([A-Za-z0-9_.][A-Za-z0-9_./-]*(?:\.(?:py|md|yml|yaml|txt|ini|json)|/))`"
+)
+# bases a relative path may be written against (docs shorthand like
+# `serving/arrivals.py` for src/repro/serving/arrivals.py included)
+BASES = (REPO, REPO / "docs", REPO / "src" / "repro")
+
+
+def _fences(text):
+    return FENCE_RE.findall(text)
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_python_fences_compile(doc):
+    for lang, body in _fences(doc.read_text()):
+        if lang == "python":
+            compile(body, f"{doc.name}:fence", "exec")
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_intra_repo_links_resolve(doc):
+    text = doc.read_text()
+    # strip fences: code samples may show illustrative paths
+    stripped = FENCE_RE.sub("", text)
+    bad = []
+    for target in LINK_RE.findall(stripped):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel and not (doc.parent / rel).exists():
+            bad.append(target)
+    assert not bad, f"{doc.name}: broken relative links {bad}"
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_backticked_paths_exist(doc):
+    stripped = FENCE_RE.sub("", doc.read_text())
+    bad = []
+    for token in TICKED_PATH_RE.findall(stripped):
+        if "*" in token or "{" in token:
+            continue        # glob/brace shorthand like bench_*.py
+        if not any((b / token).exists() for b in BASES):
+            bad.append(token)
+    assert not bad, f"{doc.name}: backticked paths not found in repo {bad}"
+
+
+def test_docs_tree_exists():
+    """The documented entry points stay present."""
+    for name in ("architecture.md", "serving.md", "reproducing.md"):
+        assert (REPO / "docs" / name).is_file(), name
+
+
+def test_readme_points_at_docs():
+    text = (REPO / "README.md").read_text()
+    assert "docs/serving.md" in text
+    assert "docs/reproducing.md" in text

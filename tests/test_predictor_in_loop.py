@@ -1,0 +1,407 @@
+"""Predictor-in-the-loop: the trained ProD-D head serving the cluster
+(PredictorService batched/jitted/cached dispatch-time inference, the
+PerfectOracle upper bound), deadline-aware EDF / least-laxity orderings, and
+dedicated LatentOracle quantile-calibration coverage."""
+
+import numpy as np
+import pytest
+
+from repro.data.lengths import (sample_prompt_latents,
+                                true_conditional_median)
+from repro.data.scenarios import get_spec
+from repro.serving.arrivals import (LatentOracle, TraceConfig, corrupt_latents,
+                                    make_trace)
+from repro.serving.cluster import Cluster
+from repro.serving.engine import ReplicaSpec, SimEngine
+from repro.serving.predictor import (PerfectOracle, PredictorService,
+                                     fit_trace_head)
+from repro.serving.request import Request
+from repro.serving.scheduler import (ORDERINGS, Policy, order_key,
+                                     quantile_remaining)
+
+TRACE_CFG = TraceConfig(n_requests=300, pattern="bursty", rate=1.5, seed=11,
+                        model="llama", scenario="math", max_seq_len=512,
+                        slo_factor=3.0, slo_floor=50.0)
+QPOL = Policy("fcfs", "quantile", quantile=0.9, max_seq_len=512)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return make_trace(TRACE_CFG)
+
+
+@pytest.fixture(scope="module")
+def head():
+    """One small trained ProD-D head shared by every test in the module."""
+    return fit_trace_head(TRACE_CFG, n_train=400, r=6, n_bins=16, hidden=32,
+                          seed=5)
+
+
+def _svc(head, **kw):
+    kw.setdefault("window", 8.0)
+    return PredictorService(head, **kw)
+
+
+# ---------------------------------------------------------------------------
+# PredictorService: batched dispatch-time inference
+# ---------------------------------------------------------------------------
+
+
+class TestPredictorService:
+    def test_annotates_all_requests(self, trace, head):
+        reqs = [r.fresh_copy() for r in trace]
+        svc = _svc(head)
+        svc.annotate(reqs, QPOL)
+        for r in reqs:
+            assert r.predicted_len is not None and r.predicted_len > 0
+            assert r.pred_q is not None
+            assert r.reserve_len is not None
+            assert 8.0 <= r.reserve_len <= QPOL.max_seq_len
+            assert r.pred_probs is not None and r.pred_probs.shape == (16,)
+            np.testing.assert_allclose(r.pred_probs.sum(), 1.0, rtol=1e-5)
+            # q0.9 of the predictive distribution sits at/above its median
+            assert r.pred_q >= r.predicted_len - 1e-6
+        assert svc.stats.requests == len(reqs)
+        assert svc.stats.batches > 0
+
+    def test_matches_unbatched_protocol(self, trace, head):
+        """Window batching + padding + caching must not change predictions:
+        the attached medians equal the raw predict() over stacked features."""
+        reqs = [r.fresh_copy() for r in trace]
+        svc = _svc(head)
+        svc.annotate(reqs, QPOL)
+        phi = np.stack([r.phi for r in reqs])
+        med = PredictorService(head).predict(phi)
+        q90 = PredictorService(head).quantile(phi, 0.9)
+        np.testing.assert_allclose([r.predicted_len for r in reqs], med,
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose([r.pred_q for r in reqs], q90,
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("kw", [dict(window=2.0), dict(window=256.0),
+                                    dict(max_batch=16), dict(cache_size=0)])
+    def test_windowing_invariant(self, trace, head, kw):
+        """Different dispatch windows / batch caps / cache settings are pure
+        amortization knobs — annotated values stay identical."""
+        base = [r.fresh_copy() for r in trace]
+        _svc(head).annotate(base, QPOL)
+        alt = [r.fresh_copy() for r in trace]
+        _svc(head, **kw).annotate(alt, QPOL)
+        for a, b in zip(base, alt):
+            assert a.predicted_len == pytest.approx(b.predicted_len, rel=1e-6)
+            assert a.pred_q == pytest.approx(b.pred_q, rel=1e-6)
+            assert a.reserve_len == pytest.approx(b.reserve_len, rel=1e-6)
+
+    def test_lru_cache_hits_and_dedupe(self, trace, head):
+        reqs = [r.fresh_copy() for r in trace[:64]]
+        svc = _svc(head)
+        svc.annotate(reqs, QPOL)
+        assert svc.stats.cache_hits == 0
+        first = [(r.predicted_len, r.reserve_len) for r in reqs]
+        again = [r.fresh_copy() for r in trace[:64]]
+        svc.annotate(again, QPOL)     # every feature vector seen already
+        assert svc.stats.cache_hits == 64
+        assert svc.stats.scored == 64          # no head re-evaluation
+        assert [(r.predicted_len, r.reserve_len) for r in again] == first
+
+    def test_duplicate_features_scored_once(self, head):
+        phi = np.array([0.5, 0.15, 0.02, 2.5])
+        reqs = [Request(rid=i, arrival=float(i) * 0.01, prompt_len=16,
+                        true_len=100, phi=phi) for i in range(32)]
+        svc = _svc(head)
+        svc.annotate(reqs, QPOL)
+        assert svc.stats.scored == 1           # in-window dedupe
+        assert len({r.predicted_len for r in reqs}) == 1
+
+    def test_requires_features(self, head):
+        r = Request(rid=0, arrival=0.0, prompt_len=8, true_len=10)
+        with pytest.raises(ValueError):
+            _svc(head).annotate([r], QPOL)
+
+    def test_reserve_policies(self, trace, head):
+        for reserve in ("max", "predicted", "quantile", "oracle"):
+            pol = Policy("fcfs", reserve, quantile=0.9, max_seq_len=512)
+            reqs = [r.fresh_copy() for r in trace[:32]]
+            _svc(head).annotate(reqs, pol)
+            for r in reqs:
+                if reserve == "max":
+                    assert r.reserve_len == 512.0
+                elif reserve == "oracle":
+                    assert r.reserve_len == float(
+                        min(max(r.true_len, 8.0), 512))
+                else:
+                    assert 8.0 <= r.reserve_len <= 512.0
+
+
+class TestPerfectOracle:
+    def test_annotates_realized_lengths(self, trace):
+        reqs = [r.fresh_copy() for r in trace[:50]]
+        PerfectOracle().annotate(reqs, QPOL)
+        for r in reqs:
+            assert r.predicted_len == float(r.true_len)
+            assert r.pred_q == float(r.true_len)
+            assert r.reserve_len == float(min(max(r.true_len, 8.0), 512))
+
+    def test_max_reserve_still_reserves_cap(self, trace):
+        reqs = [r.fresh_copy() for r in trace[:10]]
+        PerfectOracle().annotate(reqs, Policy("fcfs", "max", max_seq_len=256))
+        assert all(r.reserve_len == 256.0 for r in reqs)
+
+    def test_perfect_cluster_completes(self, trace):
+        st = Cluster.uniform(2, 4, 2 * (256 + 512), QPOL, router="psq",
+                             predictor=PerfectOracle()).run(trace)
+        assert st.completed + st.timed_out + st.dropped == len(trace)
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware orderings: EDF and least-laxity
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, arrival=0.0, deadline=None, pred_q=None, true_len=50):
+    return Request(rid=rid, arrival=arrival, prompt_len=8, true_len=true_len,
+                   predicted_len=float(true_len), reserve_len=64.0,
+                   deadline=deadline, pred_q=pred_q)
+
+
+class TestOrderKeys:
+    def test_all_orderings_have_keys(self):
+        r = _req(0, deadline=100.0, pred_q=40.0)
+        for o in ORDERINGS:
+            assert np.isfinite(order_key(r, o))
+
+    def test_edf_keys_on_deadline(self):
+        assert order_key(_req(0, deadline=10.0), "edf") == 10.0
+        assert order_key(_req(0, deadline=None), "edf") == float("inf")
+
+    def test_laxity_key_is_deadline_minus_work(self):
+        r = _req(0, deadline=100.0, pred_q=40.0)
+        assert order_key(r, "laxity") == 100.0 - 40.0
+        assert order_key(_req(0, deadline=None, pred_q=40.0),
+                         "laxity") == float("inf")
+
+    def test_quantile_remaining_fallbacks(self):
+        r = _req(0, pred_q=80.0)
+        r.generated = 30
+        assert quantile_remaining(r) == 50.0
+        r.pred_q = None                        # falls back to reservation
+        assert quantile_remaining(r) == 64.0 - 30
+        r.reserve_len = None                   # then to the point prediction
+        assert quantile_remaining(r) == 20.0
+        assert order_key(r, "fcfs") == 0.0     # unrelated orders unaffected
+
+    def test_unknown_order_raises(self):
+        with pytest.raises(ValueError):
+            order_key(_req(0), "lifo")
+
+
+class TestDeadlineOrderingSemantics:
+    def _serve_order(self, order, reqs):
+        pol = Policy(order, "quantile", quantile=0.9, max_seq_len=512)
+        eng = SimEngine(policy=pol, spec=ReplicaSpec(1, 4096))
+        eng.run(reqs)
+        return [r.rid for r in sorted(eng.done, key=lambda r: r.t_start)]
+
+    def test_edf_runs_earliest_deadline_first(self):
+        # rid 1 arrives marginally later but its deadline is far tighter
+        reqs = [_req(0, arrival=0.0, deadline=10_000.0),
+                _req(1, arrival=0.0, deadline=500.0)]
+        assert self._serve_order("edf", reqs) == [1, 0]
+        assert self._serve_order("fcfs", reqs) == [0, 1]
+
+    def test_edf_no_deadline_runs_last(self):
+        reqs = [_req(0, arrival=0.0, deadline=None),
+                _req(1, arrival=0.0, deadline=9_000.0)]
+        assert self._serve_order("edf", reqs) == [1, 0]
+
+    def test_laxity_prefers_larger_predicted_work(self):
+        # equal deadlines: the request predicted to need more tokens has the
+        # least laxity and must start first
+        reqs = [_req(0, arrival=0.0, deadline=1000.0, pred_q=20.0),
+                _req(1, arrival=0.0, deadline=1000.0, pred_q=400.0,
+                     true_len=60)]
+        assert self._serve_order("laxity", reqs) == [1, 0]
+
+    def test_deadline_ordering_cuts_slo_misses(self):
+        """Bursty trace at ~0.8 load with feasible per-class SLOs: transient
+        backlog builds during bursts, and triaging it by deadline (EDF) or
+        laxity beats FCFS on deadline misses (timed out + late finishes).
+        Needs a MIXED trace — in a single-scenario trace every request gets
+        the same SLO budget, so EDF degenerates to FCFS exactly."""
+        from repro.serving.arrivals import mean_true_length, stable_rate
+
+        probe = make_trace(TraceConfig(n_requests=1000, rate=1.0, seed=11,
+                                       model="mix", scenario="mix",
+                                       max_seq_len=512))
+        rate = stable_rate(2, 8, mean_true_length(probe), 0.8)
+        reqs = make_trace(TraceConfig(
+            n_requests=800, pattern="bursty", rate=rate, seed=11,
+            model="mix", scenario="mix", max_seq_len=512,
+            slo_factor=10.0, slo_floor=300.0))
+
+        def misses(order):
+            pol = Policy(order, "quantile", quantile=0.9, max_seq_len=512)
+            st = Cluster.uniform(2, 8, 4 * (256 + 512), pol, router="psq",
+                                 predictor=LatentOracle()).run(reqs)
+            return st.timed_out + st.slo_violations
+
+        fcfs = misses("fcfs")
+        assert misses("edf") < fcfs
+        assert misses("laxity") < fcfs
+
+
+class TestVecRefBitExactness:
+    """Acceptance: the event-leap fast path stays bit-identical on the new
+    predictor (trained head via PredictorService, PerfectOracle) and the new
+    ordering (edf, laxity) paths — engine and cluster level."""
+
+    def _rows(self, maker, reqs):
+        out = []
+        for vec in (True, False):
+            obj = maker(vec)
+            st = obj.run(reqs)
+            eng = obj.engines if hasattr(obj, "engines") else [obj]
+            done = sorted((r.rid, r.t_start, r.t_finish)
+                          for e in eng for r in e.done)
+            out.append((st.row(), done))
+        return out
+
+    @pytest.mark.parametrize("order", ["edf", "laxity"])
+    def test_engine_orderings(self, trace, order):
+        pol = Policy(order, "quantile", quantile=0.9, max_seq_len=512)
+        a, b = self._rows(
+            lambda vec: SimEngine(policy=pol, predictor=LatentOracle(),
+                                  vectorized=vec,
+                                  spec=ReplicaSpec(4, 2 * (256 + 512),
+                                                   speed=2,
+                                                   prefill_tokens_per_step=64)),
+            trace)
+        assert a == b
+
+    @pytest.mark.parametrize("order", ["fcfs", "edf", "laxity"])
+    def test_cluster_trained_head(self, trace, head, order):
+        pol = Policy(order, "quantile", quantile=0.9, max_seq_len=512)
+        a, b = self._rows(
+            lambda vec: Cluster.uniform(3, 4, 2 * (256 + 512), pol,
+                                        router="psq",
+                                        predictor=_svc(head),
+                                        vectorized=vec),
+            trace)
+        assert a == b
+
+    def test_cluster_perfect_with_stealing(self, trace):
+        specs = (ReplicaSpec(4, 2 * (256 + 512), speed=2),
+                 ReplicaSpec(2, 256 + 512, speed=1))
+        pol = Policy("laxity", "quantile", quantile=0.9, max_seq_len=512)
+        a, b = self._rows(
+            lambda vec: Cluster(specs, pol, router="psq",
+                                predictor=PerfectOracle(), vectorized=vec,
+                                rebalance_every=25, steal="quantile"),
+            trace)
+        assert a == b
+
+    def test_trained_head_deterministic_replay(self, trace, head):
+        rows = [Cluster.uniform(2, 4, 2 * (256 + 512), QPOL, router="psq",
+                                predictor=_svc(head)).run(trace).row()
+                for _ in range(2)]
+        assert rows[0] == rows[1]
+
+
+# ---------------------------------------------------------------------------
+# fused multi-quantile head decode
+# ---------------------------------------------------------------------------
+
+
+class TestFusedQuantiles:
+    def test_matches_median_path_and_monotone(self, head):
+        import jax.numpy as jnp
+        phi = jnp.asarray(np.random.default_rng(0).normal(
+            size=(23, 4)), jnp.float32)
+        probs, quants = head.quantiles(phi, (0.25, 0.5, 0.9, 0.99))
+        med = head.predict(phi)
+        np.testing.assert_allclose(np.asarray(quants[:, 1]), np.asarray(med),
+                                   rtol=1e-5, atol=1e-4)
+        q = np.asarray(quants)
+        assert np.all(np.diff(q, axis=1) >= -1e-5)   # monotone in the level
+        np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-5)
+
+    def test_interpret_kernel_matches_xla(self, head):
+        import jax.numpy as jnp
+        from repro.kernels import ops
+        phi = jnp.asarray(np.random.default_rng(1).normal(
+            size=(9, 4)), jnp.float32)
+        p = head.params
+        qs = jnp.asarray([0.5, 0.9], jnp.float32)
+        px, qx = ops.prod_head(phi, p["w1"], p["b1"], p["w2"], p["b2"],
+                               head.edges, qs=qs, impl="xla")
+        pi, qi = ops.prod_head(phi, p["w1"], p["b1"], p["w2"], p["b2"],
+                               head.edges, qs=qs, block_b=4, impl="interpret")
+        np.testing.assert_allclose(np.asarray(px), np.asarray(pi),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(qx), np.asarray(qi),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_q_one_clamps_to_last_bin_in_both_impls(self, head):
+        """q=1.0 where float32 CDF rounding never crosses: both impls must
+        clamp to the LAST bin (never silently fall to bin 0 and
+        under-reserve)."""
+        import jax.numpy as jnp
+        from repro.kernels import ops
+        phi = jnp.asarray(np.random.default_rng(2).normal(
+            size=(16, 4)), jnp.float32)
+        p = head.params
+        qs = jnp.asarray([1.0], jnp.float32)
+        lo = float(head.edges[-2])     # any q=1.0 answer lives in the last bin
+        for impl in ("xla", "interpret"):
+            _, q1 = ops.prod_head(phi, p["w1"], p["b1"], p["w2"], p["b2"],
+                                  head.edges, qs=qs, block_b=8, impl=impl)
+            assert np.all(np.asarray(q1) >= lo), impl
+
+
+# ---------------------------------------------------------------------------
+# LatentOracle calibration (satellite: direct coverage, not via cluster runs)
+# ---------------------------------------------------------------------------
+
+
+class TestLatentOracleCalibration:
+    def test_quantile_monotone_in_level(self):
+        rng = np.random.default_rng(3)
+        spec = get_spec("qwen", "longseq")
+        lat = sample_prompt_latents(rng, spec.law, 400)
+        phi = corrupt_latents(rng, lat, spec, "last")
+        o = LatentOracle()
+        qs = [o.quantile(phi, q) for q in (0.5, 0.75, 0.9, 0.99)]
+        for lo, hi in zip(qs, qs[1:]):
+            assert np.all(lo <= hi + 1e-6)
+        assert np.all(qs[0] > 0)
+
+    def test_median_error_shrinks_with_feature_noise(self):
+        """The oracle's whole point: its error IS the feature noise. MAE
+        against the true conditional median must shrink monotonically as the
+        latent corruption goes to zero, and vanish at zero."""
+        rng = np.random.default_rng(4)
+        spec = get_spec("llama", "math")
+        lat = sample_prompt_latents(rng, spec.law, 2000)
+        truth = true_conditional_median(lat)
+        o = LatentOracle()
+        maes = []
+        for sigma in (0.6, 0.3, 0.1, 0.0):
+            noisy = lat.copy()
+            noisy[:, 0] += sigma * rng.standard_normal(len(lat))
+            maes.append(float(np.mean(np.abs(o.predict(noisy) - truth))))
+        assert maes[0] > maes[1] > maes[2] > maes[3]
+        assert maes[-1] == pytest.approx(0.0, abs=1e-9)
+
+    def test_view_informativeness_ordering(self):
+        """Feature views order prediction error the way the paper calibrates
+        them: last < mean < proxy < entropy."""
+        spec = get_spec("qwen", "chat")
+        lat = sample_prompt_latents(np.random.default_rng(5), spec.law, 3000)
+        truth = true_conditional_median(lat)
+        o = LatentOracle()
+        maes = []
+        for view in ("last", "mean", "proxy", "entropy"):
+            rng = np.random.default_rng(6)    # same noise draws per view
+            phi = corrupt_latents(rng, lat, spec, view)
+            maes.append(float(np.mean(np.abs(o.predict(phi) - truth))))
+        assert maes == sorted(maes)
