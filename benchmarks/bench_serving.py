@@ -16,6 +16,11 @@ Tracks:
   head (batched jitted inference at dispatch, via ``PredictorService``)
   vs the analytic ``LatentOracle`` vs the zero-error ``PerfectOracle``,
   crossed with FCFS / EDF / least-laxity queue orderings under SLOs.
+* ``run_cluster_adaptation`` — closed-loop online adaptation: static vs
+  adaptive-conformal vs conformal+refresh serving of the trained head,
+  on a stationary vs a drifting trace, with SLO-aware admission. Shows the
+  static head's reservation coverage collapsing under drift while the
+  adapted stack holds the target.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--cluster-only]
 """
@@ -26,8 +31,10 @@ import time
 
 import numpy as np
 
-from repro.serving.arrivals import (LatentOracle, TraceConfig, make_trace,
-                                    mean_true_length, stable_rate,
+from repro.serving.adaptation import (AdaptationConfig, AdmissionController,
+                                      OnlineAdapter, coverage_of)
+from repro.serving.arrivals import (DriftSpec, LatentOracle, TraceConfig,
+                                    make_trace, mean_true_length, stable_rate,
                                     stable_rate_specs)
 from repro.serving.cluster import Cluster
 from repro.serving.engine import ReplicaSpec, SimEngine
@@ -405,9 +412,146 @@ def validate_cluster_predictors(rows) -> dict:
     }
 
 
-def main(fast=True, cluster=True, cluster_only=False, n_requests=50_000,
-         n_replicas=4, max_slots=32, pattern="bursty", seed=0, hetero=True,
-         predictors=True):
+# ---------------------------------------------------------------------------
+# online adaptation: static vs conformal vs conformal+refresh, under drift
+# ---------------------------------------------------------------------------
+
+ADAPT_MODES = (
+    # (label, gamma, refresh?) — "static" runs the identical closed-loop code
+    # path with a frozen quantile, so coverage is measured apples-to-apples
+    ("static", 0.0, False),
+    ("conformal", 0.01, False),
+    ("conformal+refresh", 0.01, True),
+)
+
+
+def _coverage_split(cl: Cluster, switch: float) -> tuple:
+    """(overall, post-switch) reservation coverage over completed requests
+    (see :func:`repro.serving.adaptation.coverage_of` for the semantics)."""
+    done = [r for e in cl.engines for r in e.done]
+    return coverage_of(done), coverage_of(done, since=switch)
+
+
+def run_cluster_adaptation(n_requests=50_000, n_replicas=4, max_slots=32,
+                           pattern="bursty", load=0.7, slo_factor=10.0,
+                           slo_floor=300.0, scale_mult=1.5, seed=0,
+                           n_train=4000, target=0.9, verbose=True):
+    """Closed-loop adaptation table: serve the trained ProD-D head through an
+    ``OnlineAdapter`` in mode ∈ {static (frozen quantile), conformal (ACI on
+    the reservation quantile), conformal+refresh (plus periodic warm-start
+    re-fits on the completion buffer)} × trace ∈ {stationary, drift}. The
+    drift trace abruptly inflates true-length scales by ``scale_mult``
+    mid-trace while features stay put — invisible to the fit-time head. All
+    rows run SLO-aware admission, so infeasible requests are rejected early
+    instead of timing out late. Reports reservation coverage (overall and
+    post-switch), p99, SLO misses, rejects, refreshes, and goodput."""
+    probe = make_trace(TraceConfig(n_requests=2000, rate=1.0, seed=seed))
+    rate = stable_rate(n_replicas, max_slots, mean_true_length(probe), load)
+    switch = 0.5 * n_requests / rate
+    base_cfg = TraceConfig(n_requests=n_requests, rate=rate, pattern=pattern,
+                           model="mix", scenario="mix", seed=seed,
+                           slo_factor=slo_factor, slo_floor=slo_floor)
+    import dataclasses
+    traces = (
+        ("stationary", make_trace(base_cfg)),
+        ("drift", make_trace(dataclasses.replace(
+            base_cfg,
+            drift=DriftSpec(switch_step=switch, scale_mult=scale_mult)))),
+    )
+    t0 = time.time()
+    head = fit_trace_head(base_cfg, n_train=n_train, r=16, seed=seed + 7)
+    t_train = time.time() - t0
+    makespan_est = n_requests / rate
+    if verbose:
+        print(f"adaptation traces: {n_requests} requests ({pattern}, rate "
+              f"{rate:.3f}/step; drift = x{scale_mult} true-length scale at "
+              f"step {switch:.0f}); ProD-D head trained in {t_train:.1f}s; "
+              f"coverage target {target}")
+        print(f"  {'trace':11s} {'mode':18s} {'cov':>6s} {'cov>sw':>7s} "
+              f"{'p99':>9s} {'viol':>6s} {'t/o':>6s} {'rej':>6s} "
+              f"{'refit':>5s} {'q_eff':>6s} {'goodput':>8s} {'secs':>6s}")
+    kv_budget = 8 * (256 + 4096)
+    pol = Policy("fcfs", "quantile", quantile=target, max_seq_len=4096)
+    rows = []
+    for tname, reqs in traces:
+        for label, gamma, refresh in ADAPT_MODES:
+            cfg = AdaptationConfig(
+                target_coverage=target, gamma=gamma, window=512, every=32,
+                refresh_every=makespan_est / 8.0 if refresh else 0.0,
+                refresh_min_samples=512, refresh_epochs=2,
+                buffer_size=4096, refresh_seed=seed + 11)
+            adapter = OnlineAdapter(PredictorService(head, window=16.0), cfg)
+            cl = Cluster.uniform(n_replicas, max_slots, kv_budget, pol,
+                                 router="psq", predictor=adapter,
+                                 admission=AdmissionController())
+            t0 = time.time()
+            st = cl.run(reqs)
+            dt = time.time() - t0
+            cov, cov_post = _coverage_split(cl, switch)
+            row = st.row()
+            row.update(trace=tname, mode=label, coverage=cov,
+                       coverage_post=cov_post, seconds=dt,
+                       adapter=adapter.row(),
+                       service=adapter.base.stats.row())
+            rows.append(row)
+            if verbose:
+                print(f"  {tname:11s} {label:18s} {cov:6.3f} {cov_post:7.3f} "
+                      f"{st.p99_latency:9.1f} {st.slo_violations:6d} "
+                      f"{st.timed_out:6d} {st.rejected:6d} "
+                      f"{st.refreshes:5d} {adapter.q_eff:6.3f} "
+                      f"{st.goodput:8.2f} {dt:6.1f}")
+    return rows
+
+
+def validate_cluster_adaptation(rows, target=0.9) -> dict:
+    if not rows:
+        return {"empty_trace": True}
+    by = {(r["trace"], r["mode"]): r for r in rows}
+    stat_static = by[("stationary", "static")]
+    stat_adapt = by[("stationary", "conformal+refresh")]
+    dr_static = by[("drift", "static")]
+    dr_conf = by[("drift", "conformal")]
+    dr_adapt = by[("drift", "conformal+refresh")]
+    return {
+        # acceptance: static coverage collapses under drift ...
+        "static_drift_cov_drop": target - dr_static["coverage_post"],
+        "static_drift_degrades": dr_static["coverage_post"] <= target - 0.10,
+        # ... while the adapted stack holds the target post-switch
+        "adapted_drift_cov_err": abs(dr_adapt["coverage_post"] - target),
+        "adapted_holds_target": abs(dr_adapt["coverage_post"] - target)
+        <= 0.05,
+        "conformal_recovers": dr_conf["coverage_post"]
+        > dr_static["coverage_post"],
+        "refresh_used": dr_adapt["refreshes"] > 0,
+        "refresh_cuts_slo_misses": (dr_adapt["slo_violations"]
+                                    + dr_adapt["timed_out"])
+        <= (dr_static["slo_violations"] + dr_static["timed_out"]),
+        # no p99 regression from running the adaptation loop when stationary
+        "stationary_p99_ok": stat_adapt["p99_latency"]
+        <= 1.05 * stat_static["p99_latency"],
+        "stationary_cov_err": abs(stat_adapt["coverage"] - target),
+        "replay_under_120s": all(r["seconds"] < 120.0 for r in rows),
+    }
+
+
+def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
+         n_requests=50_000, n_replicas=4, max_slots=32, pattern="bursty",
+         seed=0, hetero=True, predictors=True, adaptation=True):
+    if adaptation_only:
+        arows = run_cluster_adaptation(n_requests=n_requests,
+                                       n_replicas=n_replicas,
+                                       max_slots=max_slots, pattern=pattern,
+                                       seed=seed)
+        checks = validate_cluster_adaptation(arows)
+        print("adaptation checks:", checks)
+        # CI smoke mode is a regression gate: hard-fail on the acceptance
+        # booleans so nightly drift/coverage breakage turns the job red
+        hard = ("static_drift_degrades", "adapted_holds_target",
+                "conformal_recovers", "refresh_used", "stationary_p99_ok")
+        bad = [k for k in hard if not checks.get(k, False)]
+        if bad:
+            raise SystemExit(f"adaptation acceptance failed: {bad}")
+        return arows
     rows = None
     if not cluster_only:
         rows = run(fast=fast)
@@ -426,6 +570,12 @@ def main(fast=True, cluster=True, cluster_only=False, n_requests=50_000,
                                        max_slots=max_slots, pattern=pattern,
                                        seed=seed)
         print("predictor checks:", validate_cluster_predictors(prows))
+    if adaptation and (cluster or cluster_only):
+        arows = run_cluster_adaptation(n_requests=n_requests,
+                                       n_replicas=n_replicas,
+                                       max_slots=max_slots, pattern=pattern,
+                                       seed=seed)
+        print("adaptation checks:", validate_cluster_adaptation(arows))
     return rows
 
 
@@ -434,10 +584,14 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--cluster-only", action="store_true")
+    ap.add_argument("--adaptation-only", action="store_true",
+                    help="run only the online-adaptation table (CI smoke)")
     ap.add_argument("--no-hetero", action="store_true",
                     help="skip the heterogeneous x SLO x stealing table")
     ap.add_argument("--no-predictors", action="store_true",
                     help="skip the trained-head vs oracles x ordering table")
+    ap.add_argument("--no-adaptation", action="store_true",
+                    help="skip the online-adaptation (drift/conformal) table")
     ap.add_argument("--n-requests", type=int, default=50_000)
     ap.add_argument("--n-replicas", type=int, default=4)
     ap.add_argument("--max-slots", type=int, default=32)
@@ -445,7 +599,8 @@ if __name__ == "__main__":
                     choices=("poisson", "bursty", "diurnal"))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    main(cluster_only=args.cluster_only, n_requests=args.n_requests,
-         n_replicas=args.n_replicas, max_slots=args.max_slots,
-         pattern=args.pattern, seed=args.seed, hetero=not args.no_hetero,
-         predictors=not args.no_predictors)
+    main(cluster_only=args.cluster_only, adaptation_only=args.adaptation_only,
+         n_requests=args.n_requests, n_replicas=args.n_replicas,
+         max_slots=args.max_slots, pattern=args.pattern, seed=args.seed,
+         hetero=not args.no_hetero, predictors=not args.no_predictors,
+         adaptation=not args.no_adaptation)

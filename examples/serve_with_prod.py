@@ -15,7 +15,11 @@ Pipeline (all real, no stubs):
   6. put the trained head IN the dispatch loop: a PredictorService batches
      the head over arrival windows (one jitted fused call per window) and
      the cluster orders its queues by EDF / least-laxity on the predicted
-     q0.9 remaining work.
+     q0.9 remaining work;
+  7. close the loop: drift the workload mid-stream (outputs grow 1.5x while
+     features stay put) and serve it with an OnlineAdapter — adaptive
+     conformal reservation calibration + warm-start head refresh + SLO-aware
+     admission — against the frozen static head.
 
     PYTHONPATH=src python examples/serve_with_prod.py [--train-steps 300]
 """
@@ -36,6 +40,8 @@ from repro.core.predictor import train_predictor
 from repro.data.pipeline import batch_iterator, make_lm_dataset
 from repro.data.tokenizer import N_TOPICS, ToyTokenizer
 from repro.models.model_zoo import Runtime, build_model
+from repro.serving.adaptation import (AdaptationConfig, AdmissionController,
+                                      OnlineAdapter, coverage_of)
 from repro.serving.cluster import Cluster
 from repro.serving.engine import RealEngine, ReplicaSpec, SimEngine
 from repro.serving.predictor import PredictorService
@@ -60,12 +66,12 @@ def main():
     tcfg = TrainConfig(lr=3e-3, warmup_steps=10, decay_steps=args.train_steps,
                        seed=args.seed)
     ds = make_lm_dataset(2048, 96, seed=args.seed)
-    print(f"[1/6] training tiny-lm for {args.train_steps} steps ...")
+    print(f"[1/7] training tiny-lm for {args.train_steps} steps ...")
     state = train_loop(model, tcfg, batch_iterator(ds, 16, seed=args.seed),
                        args.train_steps, rt=Runtime.local(), log_every=100)
 
     # -- 2. repeated-sampling data collection --------------------------------
-    print(f"[2/6] collecting {args.r} generations x {args.n_prompts} prompts ...")
+    print(f"[2/7] collecting {args.r} generations x {args.n_prompts} prompts ...")
     eng = RealEngine(model, state.params, max_new=args.max_new, temperature=0.8)
     rng = np.random.default_rng(args.seed)
     tok = ToyTokenizer()
@@ -81,7 +87,7 @@ def main():
           f"noise radius={nr:.2f}  ({time.time()-t0:.0f}s)")
 
     # -- 3. train the ProD-D head on REAL hidden states ----------------------
-    print("[3/6] training ProD-D head on the served model's hidden states ...")
+    print("[3/7] training ProD-D head on the served model's hidden states ...")
     pcfg = PredictorConfig(n_bins=24, bin_max=float(lens.max() + 8), epochs=40,
                            batch_size=32)
     edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
@@ -94,7 +100,7 @@ def main():
           f"(noise radius {nr:.2f})")
 
     # -- 4. serve a fresh workload with ProD scheduling ----------------------
-    print(f"[4/6] serving {args.n_serve} batched requests ...")
+    print(f"[4/7] serving {args.n_serve} batched requests ...")
     arrivals = np.cumsum(rng.exponential(1.5, args.n_serve))
     fresh = rng.integers(0, args.n_prompts, args.n_serve)
     reqs = []
@@ -114,7 +120,7 @@ def main():
     # -- 5. heterogeneous cluster replay with the trained ProD head ----------
     # a fast large replica next to a slow small one, per-request SLOs, and
     # periodic ProD-aware work stealing: the full prediction-aware stack
-    print("[5/6] replaying across a heterogeneous 2-replica cluster "
+    print("[5/7] replaying across a heterogeneous 2-replica cluster "
           "(speed 2x+1x, SLOs, work stealing) ...")
     specs = (ReplicaSpec(4, 2 * (6 + args.max_new), speed=2,
                          prefill_tokens_per_step=8),
@@ -142,7 +148,7 @@ def main():
     # -- 6. predictor service in the dispatch loop ---------------------------
     # the SAME trained head, now served through the batched jitted
     # PredictorService, driving deadline-aware queue orderings
-    print("[6/6] predictor-in-the-loop: batched dispatch-time inference + "
+    print("[6/7] predictor-in-the-loop: batched dispatch-time inference + "
           "deadline-aware ordering ...")
     for order in ("fcfs", "edf", "laxity"):
         svc = PredictorService(pred, window=8.0)
@@ -156,9 +162,54 @@ def main():
               f"t/o={st.timed_out} goodput={st.goodput:.2f} "
               f"[{srow['batches']} fused batches, mean "
               f"{srow['mean_batch']:.1f} reqs, hit rate {srow['hit_rate']:.2f}]")
+
+    # -- 7. online adaptation under drift ------------------------------------
+    # mid-stream regime change: outputs grow 1.5x while the hidden-state
+    # features stay put, so the frozen head silently under-reserves. The
+    # OnlineAdapter steers the reservation quantile to its coverage target
+    # (ACI), warm-start re-fits the head on observed completions, and the
+    # AdmissionController rejects SLO-infeasible requests at enqueue. A
+    # longer workload (3x the serve set, switch after the first third) gives
+    # the feedback loop room to act; coverage is scored on the settled last
+    # third.
+    print("[7/7] online adaptation: mid-stream 1.5x output drift, static vs "
+          "adaptive-conformal + refresh ...")
+    n_ad = 3 * args.n_serve
+    arr2 = np.cumsum(rng.exponential(1.5, n_ad))
+    picks = rng.integers(0, args.n_prompts, n_ad)
+    t_switch = float(arr2[n_ad // 3])
+    t_tail = float(arr2[2 * n_ad // 3])
+    drift_reqs = []
+    for i, (j, t) in enumerate(zip(picks, arr2)):
+        draw = int(lens[j, rng.integers(0, args.r)])
+        if t >= t_switch:
+            draw = int(min(args.max_new, round(1.5 * draw)))
+        drift_reqs.append(Request(
+            rid=i, arrival=float(t), prompt_len=6, true_len=draw, phi=phi[j],
+            deadline=float(t) + (2.0 + 2.0 * (i % 3)) * args.max_new))
+    for label, gamma, refresh in (("static", 0.0, False),
+                                  ("conformal+refresh", 0.05, True)):
+        acfg = AdaptationConfig(
+            target_coverage=0.9, gamma=gamma, window=64, every=8,
+            refresh_every=0.25 * t_switch if refresh else 0.0,
+            refresh_min_samples=24, refresh_epochs=30, buffer_size=128)
+        adapter = OnlineAdapter(PredictorService(pred, window=8.0), acfg)
+        pol = Policy("fcfs", "quantile", quantile=0.9,
+                     max_seq_len=args.max_new)
+        cl = Cluster(specs, pol, router="psq", predictor=adapter,
+                     admission=AdmissionController())
+        st = cl.run(drift_reqs)
+        cov = coverage_of([r for e in cl.engines for r in e.done],
+                          since=t_tail)
+        print(f"      {label:18s} settled post-drift coverage={cov:.2f} "
+              f"(target 0.90) p99={st.p99_latency:7.1f} "
+              f"viol={st.slo_violations} t/o={st.timed_out} "
+              f"rejected={st.rejected} refits={st.refreshes} "
+              f"q_eff={adapter.q_eff:.3f}")
     print("done — ProD scheduling/routing/stealing vs prediction-blind "
           "baselines shown above; stage 6 serves the trained head itself "
-          "at dispatch time.")
+          "at dispatch time, stage 7 keeps it calibrated while the workload "
+          "drifts.")
 
 
 if __name__ == "__main__":

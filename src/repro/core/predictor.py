@@ -23,6 +23,29 @@ from repro.core.losses import soft_ce
 from repro.training.optim import adamw, Optimizer
 from repro.common.config import TrainConfig
 
+# one (Optimizer, jitted step) pair per optimizer config, shared across every
+# train_predictor call — the step closure used to be rebuilt (and re-jitted)
+# per call, so training N heads paid N compiles even at identical shapes
+_STEP_CACHE: Dict[TrainConfig, tuple] = {}
+
+
+def _opt_and_step(tcfg: TrainConfig):
+    hit = _STEP_CACHE.get(tcfg)
+    if hit is None:
+        opt = adamw(tcfg)
+
+        @jax.jit
+        def step(params, state, x, y, i):
+            loss, grads = jax.value_and_grad(
+                lambda p: soft_ce(head_logits(p, x), y)
+            )(params)
+            params, state = opt.update(grads, state, params, i)
+            return params, state, loss
+
+        hit = (opt, step)
+        _STEP_CACHE[tcfg] = hit
+    return hit
+
 
 @dataclass
 class LengthPredictor:
@@ -64,30 +87,33 @@ def train_predictor(
     pcfg: PredictorConfig,
     edges: Optional[jax.Array] = None,
     verbose: bool = False,
+    init_params: Optional[Dict[str, jax.Array]] = None,
 ) -> LengthPredictor:
+    """Fit the shared 2-layer head on (features, binned target) pairs.
+
+    ``init_params`` warm-starts from existing head weights (shapes must
+    match) — the serving refresh path re-fits on a recent completion buffer
+    this way. Warm starts take ``pcfg.epochs`` at face value; cold starts
+    keep the ~400-optimizer-step floor so tiny datasets still converge.
+    """
     N, d = phi.shape
     K = target.shape[1]
     if edges is None:
         edges = bins_mod.make_edges(pcfg.n_bins, pcfg.bin_max, pcfg.bin_spacing)
-    params = head_init(key, d, pcfg.hidden, K)
-    opt = adamw(TrainConfig(optimizer="adamw", lr=pcfg.lr, schedule="constant",
-                            warmup_steps=1, weight_decay=pcfg.weight_decay,
-                            beta1=0.9, beta2=0.999))
+    params = head_init(key, d, pcfg.hidden, K) if init_params is None \
+        else init_params
+    opt, step = _opt_and_step(
+        TrainConfig(optimizer="adamw", lr=pcfg.lr, schedule="constant",
+                    warmup_steps=1, weight_decay=pcfg.weight_decay,
+                    beta1=0.9, beta2=0.999))
     state = opt.init(params)
     bs = min(pcfg.batch_size, N)
     steps_per_epoch = max(N // bs, 1)
     # small datasets need a step floor, not an epoch count (the head sees too
-    # few updates otherwise) — keep at least ~400 optimizer steps
-    min_epochs = -(-400 // steps_per_epoch)
+    # few updates otherwise) — keep at least ~400 optimizer steps on a cold
+    # start; warm-started refits are incremental and run epochs as given
+    min_epochs = -(-400 // steps_per_epoch) if init_params is None else 1
     n_epochs = max(pcfg.epochs, min_epochs)
-
-    @jax.jit
-    def step(params, state, x, y, i):
-        loss, grads = jax.value_and_grad(
-            lambda p: soft_ce(head_logits(p, x), y)
-        )(params)
-        params, state = opt.update(grads, state, params, i)
-        return params, state, loss
 
     phi = jnp.asarray(phi, jnp.float32)
     target = jnp.asarray(target, jnp.float32)

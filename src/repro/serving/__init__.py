@@ -1,11 +1,16 @@
 """Serving substrate: requests, KV-cache reservation accounting, schedulers,
 continuous-batching engines (discrete-event simulator + real tiny-LM), the
-open-loop multi-replica cluster simulator (arrival traces + routers), and the
+open-loop multi-replica cluster simulator (arrival traces + routers), the
 dispatch-time predictor service that puts the trained ProD-D head in the
-loop. See ``docs/serving.md`` for the guide."""
+loop, and the online adaptation subsystem (drift-aware traces, adaptive
+conformal calibration, predictor refresh, SLO-aware admission) that closes
+it. See ``docs/serving.md`` for the guide."""
 
-from repro.serving.arrivals import (LatentOracle, TraceConfig, corrupt_latents,
-                                    make_trace, stable_rate_specs)
+from repro.serving.adaptation import (AdaptationConfig, AdmissionController,
+                                      OnlineAdapter, coverage_of, refit_head)
+from repro.serving.arrivals import (DriftSpec, LatentOracle, TraceConfig,
+                                    corrupt_latents, make_trace,
+                                    stable_rate_specs)
 from repro.serving.cluster import Cluster, ClusterStats, ROUTERS, STEAL_MODES
 from repro.serving.engine import ReplicaSpec, ServeStats, SimEngine
 from repro.serving.kvcache import KVCacheManager
@@ -15,9 +20,11 @@ from repro.serving.request import Request, workload_from_scenario
 from repro.serving.scheduler import ORDERINGS, Policy
 
 __all__ = [
-    "Cluster", "ClusterStats", "KVCacheManager", "LatentOracle", "ORDERINGS",
-    "PerfectOracle", "Policy", "PredictorService", "ROUTERS", "ReplicaSpec",
-    "Request", "STEAL_MODES", "ServeStats", "ServiceStats", "SimEngine",
-    "TraceConfig", "corrupt_latents", "fit_trace_head", "make_trace",
-    "stable_rate_specs", "workload_from_scenario",
+    "AdaptationConfig", "AdmissionController", "Cluster", "ClusterStats",
+    "DriftSpec", "KVCacheManager", "LatentOracle", "ORDERINGS",
+    "OnlineAdapter", "PerfectOracle", "Policy", "PredictorService", "ROUTERS",
+    "ReplicaSpec", "Request", "STEAL_MODES", "ServeStats", "ServiceStats",
+    "SimEngine", "TraceConfig", "corrupt_latents", "coverage_of",
+    "fit_trace_head", "make_trace", "refit_head", "stable_rate_specs",
+    "workload_from_scenario",
 ]

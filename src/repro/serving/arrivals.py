@@ -22,13 +22,59 @@ than math. True lengths are drawn from the *clean* latents.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.data.lengths import law_quantile, sample_lengths, sample_prompt_latents
 from repro.data.scenarios import ALL_SETTINGS, feature_sigma, get_spec
 from repro.serving.request import Request
+
+
+@dataclass(frozen=True)
+class DriftSpec:
+    """Non-stationary workload: how the length laws move mid-trace.
+
+    The drift is deliberately *invisible in features*: the multiplier inflates
+    the clean latents that true lengths are drawn from, while each request's
+    φ keeps its pre-drift distribution. A predictor fit before the switch
+    therefore silently under-covers afterwards — the regime the online
+    adaptation subsystem (:mod:`repro.serving.adaptation`) exists for.
+
+    Parameters
+    ----------
+    switch_step : trace time of the regime change.
+    scale_mult : post-switch multiplier on every prompt's true-length median
+        (1.0 = no scale drift).
+    mix_weights : post-switch arrival weights over ``cfg.settings()`` — a
+        scenario-mix shift (e.g. traffic turning mostly chat). ``None`` keeps
+        the uniform mix.
+    ramp_steps : 0 makes the scale change abrupt at ``switch_step``; > 0
+        interpolates the log multiplier linearly over
+        ``[switch_step, switch_step + ramp_steps]``.
+    """
+
+    switch_step: float
+    scale_mult: float = 1.0
+    mix_weights: Optional[Tuple[float, ...]] = None
+    ramp_steps: float = 0.0
+
+    def __post_init__(self):
+        if self.switch_step < 0:
+            raise ValueError("switch_step must be >= 0")
+        if self.scale_mult <= 0:
+            raise ValueError("scale_mult must be positive")
+        if self.ramp_steps < 0:
+            raise ValueError("ramp_steps must be >= 0")
+
+    def log_scale_at(self, t: np.ndarray) -> np.ndarray:
+        """Per-arrival log multiplier on the true-length median."""
+        full = np.log(self.scale_mult)
+        if self.ramp_steps <= 0:
+            return np.where(np.asarray(t) >= self.switch_step, full, 0.0)
+        frac = np.clip((np.asarray(t) - self.switch_step) / self.ramp_steps,
+                       0.0, 1.0)
+        return full * frac
 
 
 @dataclass(frozen=True)
@@ -53,6 +99,9 @@ class TraceConfig:
         :func:`~repro.data.scenarios.feature_sigma`).
     slo_factor, slo_floor : per-class SLOs — deadline = arrival + slo_floor
         + slo_factor × the class law's median scale. Both 0 disables SLOs.
+    drift : optional :class:`DriftSpec` making the workload non-stationary
+        (scenario-mix shift and/or true-length scale inflation at a switch
+        step). ``None`` keeps the stationary trace bit-identical to before.
     burst_* : bursty-pattern shape; diurnal_* : diurnal-pattern shape.
     """
 
@@ -71,6 +120,8 @@ class TraceConfig:
     # absolute budget than math, the per-token budget is shared. 0 = no SLOs.
     slo_factor: float = 0.0
     slo_floor: float = 0.0
+    # non-stationarity (None = stationary trace, unchanged behavior)
+    drift: Optional[DriftSpec] = None
     # bursty (2-state MMPP)
     burst_rate_mult: float = 6.0
     burst_len_mean: float = 200.0   # mean steps per burst episode
@@ -176,12 +227,30 @@ def make_trace(cfg: TraceConfig) -> List[Request]:
     heavy-tailed prompt-conditioned lengths from the calibrated scenario laws.
 
     Deterministic for a fixed config (single seeded Generator). Requests come
-    back sorted by arrival with φ = noise-corrupted latents attached."""
+    back sorted by arrival with φ = noise-corrupted latents attached.
+
+    With ``cfg.drift`` set the trace is non-stationary: arrivals after the
+    switch step re-draw their scenario from ``drift.mix_weights`` and their
+    *true* lengths from scale-inflated latents, while φ stays on the pre-drift
+    feature distribution (see :class:`DriftSpec` — the drift is invisible to
+    any predictor that only sees features)."""
     rng = np.random.default_rng(cfg.seed)
     n = cfg.n_requests
     arrivals = arrival_times(cfg, rng)
     settings = cfg.settings()
     pick = rng.integers(0, len(settings), size=n)
+    drift = cfg.drift
+    log_shift = None
+    if drift is not None:
+        if drift.mix_weights is not None:
+            w = np.asarray(drift.mix_weights, np.float64)
+            if w.shape != (len(settings),) or np.any(w < 0) or w.sum() <= 0:
+                raise ValueError(
+                    f"mix_weights must be {len(settings)} non-negative "
+                    f"weights (one per cfg.settings() entry), got {w}")
+            post_pick = rng.choice(len(settings), size=n, p=w / w.sum())
+            pick = np.where(arrivals >= drift.switch_step, post_pick, pick)
+        log_shift = drift.log_scale_at(arrivals)
 
     true_len = np.zeros(n, np.int64)
     phi = np.zeros((n, 4), np.float64)
@@ -192,7 +261,11 @@ def make_trace(cfg: TraceConfig) -> List[Request]:
             continue
         spec = get_spec(model, scen)
         lat = sample_prompt_latents(rng, spec.law, len(idx))
-        true_len[idx] = sample_lengths(rng, lat, 1, spec.law)[:, 0]
+        lat_true = lat
+        if log_shift is not None:
+            lat_true = lat.copy()
+            lat_true[:, 0] += log_shift[idx]
+        true_len[idx] = sample_lengths(rng, lat_true, 1, spec.law)[:, 0]
         phi[idx] = corrupt_latents(rng, lat, spec, cfg.view)
         slo_budget[idx] = cfg.slo_floor + cfg.slo_factor * spec.law.median_scale
     true_len = np.minimum(true_len, cfg.max_seq_len)

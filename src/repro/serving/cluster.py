@@ -33,6 +33,14 @@ predicted-quantile remaining work, moving the most token-load per migration;
 
 All replicas share one global clock; dispatch happens at request arrival
 (open loop — the router never sees realized lengths, only predictions).
+
+Closed-loop adaptation: passing an
+:class:`~repro.serving.adaptation.OnlineAdapter` as the ``predictor``
+switches :meth:`Cluster.run` into its feedback mode — requests are annotated
+at dispatch time with the adapter's current calibration/weights, and
+observed completions flow back at fixed checkpoints. An optional
+``admission`` controller can reject SLO-infeasible requests at the enqueue
+seam, and ``steal_cost`` charges a migration delay on stolen work.
 """
 
 from __future__ import annotations
@@ -73,6 +81,9 @@ class ClusterStats:
     slo_violations: int = 0        # completed past their deadline
     goodput: float = 0.0           # within-SLO completed tokens / step
     stolen: int = 0                # queued requests migrated by rebalancing
+    steal_delay: int = 0           # total migration-delay ticks charged
+    rejected: int = 0              # admission-controlled away at enqueue
+    refreshes: int = 0             # predictor weight swaps during the run
     balance: float = 1.0           # max/mean completed tokens per replica
     replica_rows: List[dict] = field(default_factory=list)
 
@@ -104,16 +115,33 @@ class Cluster:
         per-slot reference; ``False`` forces the reference loop).
     rebalance_every : steal queued work every k steps (0 disables).
     steal : victim selection, one of :data:`STEAL_MODES`.
+    steal_cost : migration delay in ticks charged per stolen request (KV
+        pages / prompt re-transfer): a migrated entry becomes runnable on
+        the thief only ``steal_cost`` ticks after the rebalance (0 keeps
+        the legacy free-migration model).
+    admission : optional SLO-aware admission controller (an object with
+        ``admit(request, engine, spec, now) -> bool``, e.g.
+        :class:`~repro.serving.adaptation.AdmissionController`): requests it
+        declines at dispatch are counted as ``rejected`` and never enqueued.
+
+    A ``predictor`` that also exposes ``observe`` (an
+    :class:`~repro.serving.adaptation.OnlineAdapter`) switches :meth:`run`
+    into its closed loop: requests are annotated at dispatch time instead
+    of up front, and observed completions are fed back at fixed
+    ``adapter.cfg.every``-tick checkpoints (in a canonical order, so both
+    decode paths see the identical feedback stream).
     """
 
     def __init__(self, specs: Sequence[ReplicaSpec], policy: Policy,
                  router: str = "round_robin", predictor=None,
                  vectorized: bool = True, rebalance_every: int = 0,
-                 steal: str = "tail"):
+                 steal: str = "tail", steal_cost: int = 0, admission=None):
         if router not in ROUTERS:
             raise ValueError(f"router {router!r} not in {ROUTERS}")
         if steal not in STEAL_MODES:
             raise ValueError(f"steal {steal!r} not in {STEAL_MODES}")
+        if steal_cost < 0:
+            raise ValueError("steal_cost must be >= 0")
         specs = tuple(specs)
         if not specs:
             raise ValueError("need at least one ReplicaSpec")
@@ -124,13 +152,18 @@ class Cluster:
         self.predictor = predictor
         self.rebalance_every = int(rebalance_every)
         self.steal = steal
+        self.steal_cost = int(steal_cost)
+        self.admission = admission
         self.stolen = 0
+        self.steal_delay = 0
+        self.rejected_requests: List[Request] = []
         self.engines = [
             SimEngine(policy=policy, predictor=None, vectorized=vectorized,
                       spec=spec)
             for spec in specs
         ]
         self._rr = 0
+        self._done_seen = [0] * self.n_replicas
 
     @classmethod
     def uniform(cls, n_replicas: int, max_slots: int, kv_budget: int,
@@ -187,7 +220,11 @@ class Cluster:
         d_eng, t_eng = self.engines[donor], self.engines[thief]
         rd = self.specs[donor].service_rate
         rt = self.specs[thief].service_rate
-        qd, qt = len(d_eng._ready), len(t_eng._ready)
+        # queue length counts in-transit migrations (the thief's future heap
+        # under steal_cost > 0) — otherwise back-to-back rebalances see the
+        # thief as empty and keep over-stealing to it
+        qd = len(d_eng._ready) + len(d_eng._future)
+        qt = len(t_eng._ready) + len(t_eng._future)
         k = int((qd * rt - qt * rd) / (rd + rt))
         if k <= 0:
             return
@@ -195,31 +232,83 @@ class Cluster:
                                    fit=self.specs[thief].kv_budget)
         for r in moved:
             r.replica = thief
-        t_eng.submit(moved)
+        if self.steal_cost > 0:
+            # migration isn't free: the stolen entries only become runnable
+            # on the thief steal_cost ticks from now (KV/prompt re-transfer)
+            t_eng.submit(moved, after=t_eng.t + self.steal_cost)
+            self.steal_delay += self.steal_cost * len(moved)
+        else:
+            t_eng.submit(moved)
         self.stolen += len(moved)
+
+    # -- adaptation feedback (closed loop) -----------------------------------
+
+    def _harvest_done(self) -> List[Request]:
+        """Newly finished requests since the last harvest, in a canonical
+        global order — (finish tick, replica, completion order) — that is
+        independent of how often the harvest runs, so the adapter's feedback
+        stream is bit-identical between the reference (every tick) and
+        event-leap (sparse iterations) paths."""
+        fresh = []
+        for i, e in enumerate(self.engines):
+            done = e.done
+            for j in range(self._done_seen[i], len(done)):
+                fresh.append((float(done[j].t_finish), i, j, done[j]))
+            self._done_seen[i] = len(done)
+        fresh.sort(key=lambda x: x[:3])
+        return [x[3] for x in fresh]
 
     # -- lockstep replay -----------------------------------------------------
 
     def run(self, requests: Sequence[Request],
             max_steps: int = 10_000_000) -> ClusterStats:
         reqs = [r.fresh_copy() for r in requests]
-        annotate_predictions(reqs, self.predictor, self.policy)
+        adapter = self.predictor if hasattr(self.predictor, "observe") \
+            else None
+        if adapter is None:
+            annotate_predictions(reqs, self.predictor, self.policy)
+        else:
+            adapter.reset()
         reqs.sort(key=lambda r: r.arrival)
         vectorized = all(e.vectorized for e in self.engines)
         for e in self.engines:
             e.reset()
         self._rr = 0
         self.stolen = 0
+        self.steal_delay = 0
+        self.rejected_requests = []
+        self._done_seen = [0] * self.n_replicas
         t = 0.0     # advances in unit ticks (plus integer leaps) from 0.0
         next_reb = self.rebalance_every if self.rebalance_every > 0 else None
+        next_adapt = float(adapter.cfg.every) if adapter is not None else None
         ptr, n = 0, len(reqs)
         while True:
+            batch = []
             while ptr < n and reqs[ptr].arrival <= t:
-                r = reqs[ptr]
-                i = self._route(r)
-                r.replica = i
-                self.engines[i].submit([r])
+                batch.append(reqs[ptr])
                 ptr += 1
+            if batch:
+                if adapter is not None:
+                    # closed loop: annotate at dispatch time with the
+                    # adapter's CURRENT calibration and weights
+                    adapter.annotate(batch, self.policy)
+                for r in batch:
+                    i = self._route(r)
+                    if (self.admission is not None
+                            and not self.admission.admit(
+                                r, self.engines[i], self.specs[i], t)):
+                        if self.router == "round_robin":
+                            # a rejected request never enqueues, so it must
+                            # not burn the rotation slot either
+                            self._rr = (self._rr - 1) % self.n_replicas
+                        self.rejected_requests.append(r)
+                        continue
+                    r.replica = i
+                    self.engines[i].submit([r])
+            if next_adapt is not None and t >= next_adapt:
+                adapter.observe(self._harvest_done())
+                adapter.maybe_refresh(t)
+                next_adapt += adapter.cfg.every
             if next_reb is not None and t >= next_reb:
                 self._rebalance()
                 next_reb += self.rebalance_every
@@ -230,7 +319,8 @@ class Cluster:
             if vectorized:
                 # lockstep event leap: jump all replicas over the span in
                 # which no replica can admit/preempt/grow/complete, no trace
-                # arrival needs dispatching, and no rebalance tick falls
+                # arrival needs dispatching, and no rebalance or adaptation
+                # tick falls
                 ks = [e.ticks_to_event() for e in self.engines]
                 k = min(ks)
                 if ptr < n:
@@ -239,6 +329,8 @@ class Cluster:
                     k = min(k, max(1.0, np.ceil(reqs[ptr].arrival - t)))
                 if next_reb is not None:
                     k = min(k, max(1.0, float(next_reb) - t))
+                if next_adapt is not None:
+                    k = min(k, max(1.0, float(next_adapt) - t))
                 q = int(min(k - 1, max(max_steps - t - 1, 0)))
                 if q > 0:
                     for e in self.engines:
@@ -256,9 +348,13 @@ class Cluster:
                 for e in self.engines:
                     e.step()
             t += 1.0
-        return self._stats(t)
+        if adapter is not None:
+            # final harvest: completions between the last checkpoint and the
+            # end of the run still count toward coverage totals
+            adapter.observe(self._harvest_done())
+        return self._stats(t, adapter)
 
-    def _stats(self, t: float) -> ClusterStats:
+    def _stats(self, t: float, adapter=None) -> ClusterStats:
         done = [r for e in self.engines for r in e.done]
         toks = sum(r.true_len for r in done)
         reserved_steps = sum(e.kv.total_reserved_steps for e in self.engines)
@@ -283,6 +379,9 @@ class Cluster:
             slo_violations=sum(e.slo_violations for e in self.engines),
             goodput=_goodput(done, t),
             stolen=self.stolen,
+            steal_delay=self.steal_delay,
+            rejected=len(self.rejected_requests),
+            refreshes=adapter.refreshes if adapter is not None else 0,
             balance=float(per_replica_toks.max()) / mean_toks,
             replica_rows=[e.stats().row() for e in self.engines],
             **_latency_stats(done),

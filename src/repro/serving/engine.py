@@ -176,7 +176,9 @@ class SimEngine:
         self.slo_violations = 0
         self._progress = True       # did the last decode tick advance any slot?
         self._seq = 0                       # heap tie-break, FIFO among ties
-        self._future: list = []             # (arrival, seq, Request)
+        self._future: list = []             # (due tick, seq, Request)
+        self._future_need = 0               # Σ future reservation needs
+        self._future_pred = 0.0             # Σ future predicted remaining
         self._ready: list = []              # (policy key, seq, Request)
         self._ready_need = 0                # Σ queued reservation needs
         self._ready_pred = 0.0              # Σ queued predicted remaining
@@ -215,13 +217,22 @@ class SimEngine:
         self._forget_ready(r)
         return r
 
-    def submit(self, requests: List[Request]):
+    def submit(self, requests: List[Request], after: Optional[float] = None):
         """Enqueue requests (already annotated with predictions/reservations).
-        Requests with a future arrival wait in the arrival heap."""
+        Requests with a future arrival wait in the arrival heap. ``after``
+        holds entries back until that tick even if they already arrived —
+        the work-stealing migration delay (KV pages / prompt re-transfer):
+        a stolen request becomes runnable on the thief only at
+        ``max(arrival, after)``, while latency still counts from ``arrival``.
+        """
         for r in requests:
-            if r.arrival > self.t:
+            due = float(r.arrival) if after is None \
+                else max(float(r.arrival), float(after))
+            if due > self.t:
                 self._seq += 1
-                heapq.heappush(self._future, (float(r.arrival), self._seq, r))
+                heapq.heappush(self._future, (due, self._seq, r))
+                self._future_need += int(r.prompt_len + r.reserve_len)
+                self._future_pred += predicted_remaining(r)
             else:
                 self._push_ready(r)
 
@@ -238,22 +249,28 @@ class SimEngine:
         return self._timed_out
 
     # -- router signals (cluster dispatch) -----------------------------------
+    # these count the future heap too: in cluster use it holds exactly the
+    # in-transit stolen requests (steal_cost migration delay) — work already
+    # assigned to this replica that load signals must not ignore, or
+    # consecutive rebalances would over-steal to the same thief
 
     @property
     def outstanding_requests(self) -> int:
-        return self._n_active + len(self._ready)
+        return self._n_active + len(self._ready) + len(self._future)
 
     @property
     def outstanding_kv(self) -> int:
-        """Reserved KV of active slots + reservation needs of the queue."""
-        return self.kv.reserved_now + self._ready_need
+        """Reserved KV of active slots + reservation needs of the queue
+        (including in-transit migrations)."""
+        return self.kv.reserved_now + self._ready_need + self._future_need
 
     def predicted_backlog(self) -> float:
-        """Predicted remaining decode tokens across active + queued requests
-        (the ProD signal a predicted-shortest-queue router dispatches on)."""
+        """Predicted remaining decode tokens across active + queued +
+        in-transit requests (the ProD signal a predicted-shortest-queue
+        router dispatches on)."""
         n = self._n_active
         act = float(np.maximum(self._a_pred[:n] - self._a_gen[:n], 1.0).sum())
-        return act + self._ready_pred
+        return act + self._ready_pred + self._future_pred
 
     # -- work stealing (cluster rebalance) -----------------------------------
 
@@ -332,6 +349,8 @@ class SimEngine:
     def _admit(self):
         while self._future and self._future[0][0] <= self.t:
             _, _, r = heapq.heappop(self._future)
+            self._future_need -= int(r.prompt_len + r.reserve_len)
+            self._future_pred -= predicted_remaining(r)
             self._push_ready(r)
         self._expire_ready_head()
         while self._n_active < self.max_slots and self._ready:

@@ -67,7 +67,8 @@ class ServiceStats:
     ``requests`` — requests annotated; ``scored`` — requests that reached the
     head (misses); ``cache_hits`` — served from the LRU; ``batches`` — fused
     head calls; ``padded`` — wasted pad slots across those calls; ``buckets``
-    — distinct compiled batch shapes (one jit compile each).
+    — distinct compiled batch shapes (one jit compile each); ``refreshes`` —
+    weight swaps installed via :meth:`PredictorService.swap_weights`.
     """
 
     requests: int = 0
@@ -75,6 +76,7 @@ class ServiceStats:
     cache_hits: int = 0
     batches: int = 0
     padded: int = 0
+    refreshes: int = 0
     buckets: set = field(default_factory=set)
 
     def row(self) -> dict:
@@ -126,7 +128,22 @@ class PredictorService:
         self.attach_hist = attach_hist
         self.impl = impl
         self.stats = ServiceStats()
-        self._cache: "OrderedDict[bytes, tuple]" = OrderedDict()
+        self._cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+
+    # -- weight refresh (online adaptation) ----------------------------------
+
+    def swap_weights(self, predictor):
+        """Install re-fit head weights without losing batching/cache stats.
+
+        The live service keeps its window/bucket/LRU configuration and
+        operational counters; only the underlying
+        :class:`~repro.core.predictor.LengthPredictor` changes. Cache
+        hygiene: the LRU is cleared wholesale, so a stale (pre-refresh)
+        prediction can never be served after a swap; ``stats.refreshes``
+        counts the installed weight versions."""
+        self.predictor = predictor
+        self._cache.clear()
+        self.stats.refreshes += 1
 
     # -- fused inference -----------------------------------------------------
 

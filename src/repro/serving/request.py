@@ -23,6 +23,10 @@ class Request:
     # least-laxity ordering and quantile work stealing consume
     pred_q: Optional[float] = None
     pred_probs: Optional[np.ndarray] = None  # predictive histogram over bins
+    # calibrated reservation quantile recorded at annotation time by an
+    # OnlineAdapter — the conformal score target (true_len <= cal_q means
+    # covered). Immutable once set, unlike reserve_len which eviction may bump
+    cal_q: Optional[float] = None
     # trace provenance (cluster simulator)
     setting: Optional[str] = None       # "model/scenario" the law came from
     deadline: Optional[float] = None    # absolute SLO: must finish by this step

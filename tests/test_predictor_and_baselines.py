@@ -88,10 +88,14 @@ def test_method_ordering_matches_paper(scenario, pcfg):
     k = jax.random.PRNGKey(2)
     # train only the methods the assertions below compare (s3/trail_mean are
     # covered by their own tests); keep fold_in indices = METHODS positions
-    # so each method's result is identical to the full sweep's
+    # so each method's result is identical to the full sweep's. hidden=96
+    # (vs the shared fixture's 256) roughly halves the 8 head trainings this
+    # test pays for — every assertion is method-vs-method at identical dims,
+    # so the paper-structure claims are unchanged
+    ocfg = dataclasses.replace(pcfg, hidden=96)
     needed = ("constant_median", "trail_last", "egtp", "prod_m", "prod_d")
     res = {m: run_method(jax.random.fold_in(k, METHODS.index(m)),
-                         scenario, m, pcfg) for m in needed}
+                         scenario, m, ocfg) for m in needed}
     assert res["prod_d"].test_mae < res["trail_last"].test_mae
     # the paper's ProD-M vs TRAIL-last gap is ~5%; allow small-sample noise
     assert res["prod_m"].test_mae < res["trail_last"].test_mae * 1.05
