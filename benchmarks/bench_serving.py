@@ -413,6 +413,129 @@ def validate_cluster_predictors(rows) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# preemption modes: recompute vs keep-pages, over orderings x quantiles
+# ---------------------------------------------------------------------------
+
+PREEMPTION_MATRIX = tuple(
+    # (order, preempt_mode, quantile, preempt) — the paired recompute/keep
+    # rows differ ONLY in what happens to a victim's KV reservation, so the
+    # delta is exactly the partial-reservation handoff; the preempt=False
+    # pair is the no-regression control (modes must be bit-identical there)
+    (order, mode, q, True)
+    for order in ("srtf_pred", "laxity")
+    for q in (0.75, 0.9)
+    for mode in ("recompute", "keep")
+) + (("srtf_pred", "recompute", 0.9, False),
+     ("srtf_pred", "keep", 0.9, False))
+
+
+def run_cluster_preemption(n_requests=50_000, n_replicas=4, max_slots=32,
+                           pattern="bursty", load=0.55, page_size=16,
+                           seed=0, verbose=True):
+    """Keep-pages vs recompute preemption at equal KV budget: replay one
+    heavy-tailed trace under srtf/laxity preemptive orderings × reservation
+    quantiles × ``preempt_mode``, on a paged (``page_size``-token) KV pool
+    with an expensive prefill (so a recompute-mode resume visibly re-pays
+    ceil((prompt+progress)/rate) ticks that keep mode skips). The load is
+    feasible — every request completes — so the latency columns isolate the
+    recompute waste instead of saturating at the SLO deadline."""
+    probe = make_trace(TraceConfig(n_requests=2000, rate=1.0, seed=seed))
+    rate = stable_rate(n_replicas, max_slots, mean_true_length(probe), load)
+    cfg = TraceConfig(n_requests=n_requests, rate=rate, pattern=pattern,
+                      model="mix", scenario="mix", seed=seed,
+                      slo_factor=30.0, slo_floor=2000.0)
+    t0 = time.time()
+    reqs = make_trace(cfg)
+    if not reqs:
+        print("empty trace (n_requests=0): nothing to replay")
+        return []
+    kv_budget = (8 * (256 + 4096)) // page_size * page_size
+    specs = (ReplicaSpec(max_slots, kv_budget, speed=1,
+                         prefill_tokens_per_step=8,
+                         page_size=page_size),) * n_replicas
+    if verbose:
+        print(f"preemption trace: {n_requests} requests ({pattern}, rate "
+              f"{rate:.3f}/step) built in {time.time() - t0:.1f}s; "
+              f"page_size={page_size}, kv={kv_budget}/replica, prefill "
+              f"8 tok/tick")
+        print(f"  {'order':10s} {'mode':10s} {'q':>5s} {'preempt':>8s} "
+              f"{'p50':>8s} {'p99':>9s} {'recomp':>7s} {'heldpk':>7s} "
+              f"{'occ':>6s} {'frag':>6s} {'secs':>6s}")
+    oracle = make_oracle(cfg)
+    rows = []
+    for order, mode, q, preempt in PREEMPTION_MATRIX:
+        pol = Policy(order, "quantile", quantile=q, max_seq_len=4096,
+                     preempt=preempt, preempt_factor=1.2, preempt_mode=mode)
+        t0 = time.time()
+        st = Cluster(specs, pol, router="psq", predictor=oracle).run(reqs)
+        dt = time.time() - t0
+        row = st.row()
+        row.update(order=order, mode=mode, quantile=q, preempt=preempt,
+                   seconds=dt)
+        rows.append(row)
+        if verbose:
+            print(f"  {order:10s} {mode:10s} {q:5.2f} {str(preempt):>8s} "
+                  f"{st.p50_latency:8.1f} {st.p99_latency:9.1f} "
+                  f"{st.recompute_ticks:7d} {st.held_peak:7d} "
+                  f"{st.occupancy:6.3f} {st.frag_ratio:6.4f} {dt:6.1f}")
+    return rows
+
+
+def validate_cluster_preemption(rows) -> dict:
+    if not rows:
+        return {"empty_trace": True}
+    by = {(r["order"], r["mode"], r["quantile"], r["preempt"]): r
+          for r in rows}
+    pairs = [((o, "recompute", q, True), (o, "keep", q, True))
+             for o in ("srtf_pred", "laxity") for q in (0.75, 0.9)]
+    recomp_cut = all(by[k]["recompute_ticks"] > by[kk]["recompute_ticks"]
+                     for k, kk in pairs)
+    # headline claim: strict p99 reduction on the srtf pairs (the classic
+    # SRTF-churn regime); the laxity pairs must stay within noise (5%)
+    p99_srtf = all(by[("srtf_pred", "keep", q, True)]["p99_latency"]
+                   < by[("srtf_pred", "recompute", q, True)]["p99_latency"]
+                   for q in (0.75, 0.9))
+    p99_not_worse = all(by[kk]["p99_latency"] <= by[k]["p99_latency"] * 1.05
+                        for k, kk in pairs)
+    base = by[("srtf_pred", "recompute", 0.9, True)]
+    keep = by[("srtf_pred", "keep", 0.9, True)]
+    # preempt=False control: the mode knob must be completely inert
+    off_a = dict(by[("srtf_pred", "recompute", 0.9, False)])
+    off_b = dict(by[("srtf_pred", "keep", 0.9, False)])
+    for d in (off_a, off_b):
+        for k in ("seconds", "mode"):
+            d.pop(k, None)
+    return {
+        "preemptions_exercised": all(
+            by[k]["preemptions"] > 0 for k, _ in pairs),
+        "keep_cuts_recompute_ticks": recomp_cut,
+        "recompute_ticks_saved": base["recompute_ticks"]
+        - keep["recompute_ticks"],
+        "keep_p99_reduced_srtf": p99_srtf,
+        "keep_p99_srtf_gain_pct": 100 * (base["p99_latency"]
+                                         - keep["p99_latency"])
+        / max(base["p99_latency"], 1e-9),
+        "keep_p99_within_5pct_everywhere": p99_not_worse,
+        "keep_mean_latency_gain": base["mean_latency"] - keep["mean_latency"],
+        "keep_holds_pages": keep["held_peak"] > 0,
+        # conservation, not equality: at 50k a handful of SLO timeouts may
+        # land differently per row, but nothing may vanish and the load must
+        # stay feasible (≥ 99.5% completion everywhere)
+        "all_accounted": len({r["completed"] + r["timed_out"] + r["dropped"]
+                              + r["rejected"] for r in rows}) == 1,
+        "completion_rate_min": min(
+            r["completed"] / (r["completed"] + r["timed_out"] + r["dropped"]
+                              + r["rejected"]) for r in rows),
+        "load_feasible": all(
+            r["completed"] >= 0.995 * (r["completed"] + r["timed_out"]
+                                       + r["dropped"] + r["rejected"])
+            for r in rows),
+        "no_regression_when_preempt_off": off_a == off_b,
+        "replay_under_90s": all(r["seconds"] < 90.0 for r in rows),
+    }
+
+
+# ---------------------------------------------------------------------------
 # online adaptation: static vs conformal vs conformal+refresh, under drift
 # ---------------------------------------------------------------------------
 
@@ -535,8 +658,26 @@ def validate_cluster_adaptation(rows, target=0.9) -> dict:
 
 
 def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
-         n_requests=50_000, n_replicas=4, max_slots=32, pattern="bursty",
-         seed=0, hetero=True, predictors=True, adaptation=True):
+         preemption_only=False, n_requests=50_000, n_replicas=4, max_slots=32,
+         pattern="bursty", seed=0, hetero=True, predictors=True,
+         adaptation=True, preemption=True):
+    if preemption_only:
+        prows = run_cluster_preemption(n_requests=n_requests,
+                                       n_replicas=n_replicas,
+                                       max_slots=max_slots, pattern=pattern,
+                                       seed=seed)
+        checks = validate_cluster_preemption(prows)
+        print("preemption checks:", checks)
+        # CI smoke mode is a regression gate: hard-fail on the acceptance
+        # booleans so a keep-pages regression turns the nightly job red
+        hard = ("preemptions_exercised", "keep_cuts_recompute_ticks",
+                "keep_p99_reduced_srtf", "keep_p99_within_5pct_everywhere",
+                "keep_holds_pages", "no_regression_when_preempt_off",
+                "all_accounted", "load_feasible")
+        bad = [k for k in hard if not checks.get(k, False)]
+        if bad:
+            raise SystemExit(f"preemption acceptance failed: {bad}")
+        return prows
     if adaptation_only:
         arows = run_cluster_adaptation(n_requests=n_requests,
                                        n_replicas=n_replicas,
@@ -570,6 +711,12 @@ def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
                                        max_slots=max_slots, pattern=pattern,
                                        seed=seed)
         print("predictor checks:", validate_cluster_predictors(prows))
+    if preemption and (cluster or cluster_only):
+        prows = run_cluster_preemption(n_requests=n_requests,
+                                       n_replicas=n_replicas,
+                                       max_slots=max_slots, pattern=pattern,
+                                       seed=seed)
+        print("preemption checks:", validate_cluster_preemption(prows))
     if adaptation and (cluster or cluster_only):
         arows = run_cluster_adaptation(n_requests=n_requests,
                                        n_replicas=n_replicas,
@@ -586,12 +733,17 @@ if __name__ == "__main__":
     ap.add_argument("--cluster-only", action="store_true")
     ap.add_argument("--adaptation-only", action="store_true",
                     help="run only the online-adaptation table (CI smoke)")
+    ap.add_argument("--preemption-only", action="store_true",
+                    help="run only the recompute-vs-keep preemption table "
+                         "(CI smoke)")
     ap.add_argument("--no-hetero", action="store_true",
                     help="skip the heterogeneous x SLO x stealing table")
     ap.add_argument("--no-predictors", action="store_true",
                     help="skip the trained-head vs oracles x ordering table")
     ap.add_argument("--no-adaptation", action="store_true",
                     help="skip the online-adaptation (drift/conformal) table")
+    ap.add_argument("--no-preemption", action="store_true",
+                    help="skip the recompute-vs-keep preemption table")
     ap.add_argument("--n-requests", type=int, default=50_000)
     ap.add_argument("--n-replicas", type=int, default=4)
     ap.add_argument("--max-slots", type=int, default=32)
@@ -600,7 +752,9 @@ if __name__ == "__main__":
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     main(cluster_only=args.cluster_only, adaptation_only=args.adaptation_only,
+         preemption_only=args.preemption_only,
          n_requests=args.n_requests, n_replicas=args.n_replicas,
          max_slots=args.max_slots, pattern=args.pattern, seed=args.seed,
          hetero=not args.no_hetero, predictors=not args.no_predictors,
-         adaptation=not args.no_adaptation)
+         adaptation=not args.no_adaptation,
+         preemption=not args.no_preemption)

@@ -17,14 +17,14 @@ from repro.serving.kvcache import KVCacheManager
 from repro.serving.predictor import (PerfectOracle, PredictorService,
                                      ServiceStats, fit_trace_head)
 from repro.serving.request import Request, workload_from_scenario
-from repro.serving.scheduler import ORDERINGS, Policy
+from repro.serving.scheduler import ORDERINGS, PREEMPT_MODES, Policy
 
 __all__ = [
     "AdaptationConfig", "AdmissionController", "Cluster", "ClusterStats",
     "DriftSpec", "KVCacheManager", "LatentOracle", "ORDERINGS",
-    "OnlineAdapter", "PerfectOracle", "Policy", "PredictorService", "ROUTERS",
-    "ReplicaSpec", "Request", "STEAL_MODES", "ServeStats", "ServiceStats",
-    "SimEngine", "TraceConfig", "corrupt_latents", "coverage_of",
-    "fit_trace_head", "make_trace", "refit_head", "stable_rate_specs",
-    "workload_from_scenario",
+    "OnlineAdapter", "PREEMPT_MODES", "PerfectOracle", "Policy",
+    "PredictorService", "ROUTERS", "ReplicaSpec", "Request", "STEAL_MODES",
+    "ServeStats", "ServiceStats", "SimEngine", "TraceConfig",
+    "corrupt_latents", "coverage_of", "fit_trace_head", "make_trace",
+    "refit_head", "stable_rate_specs", "workload_from_scenario",
 ]

@@ -345,6 +345,10 @@ class AdmissionController:
             return True
         work = float(req.reserve_len) if req.reserve_len is not None \
             else quantile_remaining(req)
+        # note: the engine grants the reservation page-rounded
+        # (spec.page_size), but that slack is memory, not decode work — the
+        # service-time estimate stays in raw tokens, so admission does not
+        # over-reject short requests as pages grow
         decode = float(np.ceil(work / spec.speed))
         pts = spec.prefill_tokens_per_step
         prefill = float(-(-int(req.prompt_len) // pts)) if pts > 0 else 0.0

@@ -29,7 +29,10 @@ from the most- to the least-loaded replica under the router's own load
 metric, until their queue lengths meet in the middle. ``steal="quantile"``
 is the ProD-aware variant: it steals the requests with the largest
 predicted-quantile remaining work, moving the most token-load per migration;
-``steal="tail"`` takes the entries the donor would serve last.
+``steal="tail"`` takes the entries the donor would serve last. A preempted
+request holding kept pages (``Policy.preempt_mode="keep"``) migrates them
+with it — the donor releases, the thief re-reserves (page handoff), and the
+``steal_cost`` delay scales with the pages moved.
 
 All replicas share one global clock; dispatch happens at request arrival
 (open loop — the router never sees realized lengths, only predictions).
@@ -82,9 +85,15 @@ class ClusterStats:
     goodput: float = 0.0           # within-SLO completed tokens / step
     stolen: int = 0                # queued requests migrated by rebalancing
     steal_delay: int = 0           # total migration-delay ticks charged
+    steal_pages: int = 0           # total KV pages moved by migrations
     rejected: int = 0              # admission-controlled away at enqueue
     refreshes: int = 0             # predictor weight swaps during the run
     balance: float = 1.0           # max/mean completed tokens per replica
+    # paged-KV accounting, aggregated over replicas (see ServeStats)
+    occupancy: float = 0.0         # mean reserved fraction of the fleet pool
+    frag_ratio: float = 0.0        # page-rounding slack / reserved integral
+    held_peak: int = 0             # Σ per-replica peak held tokens
+    recompute_ticks: int = 0       # prefill ticks re-paid for preempted work
     replica_rows: List[dict] = field(default_factory=list)
 
     def row(self) -> dict:
@@ -115,10 +124,12 @@ class Cluster:
         per-slot reference; ``False`` forces the reference loop).
     rebalance_every : steal queued work every k steps (0 disables).
     steal : victim selection, one of :data:`STEAL_MODES`.
-    steal_cost : migration delay in ticks charged per stolen request (KV
-        pages / prompt re-transfer): a migrated entry becomes runnable on
-        the thief only ``steal_cost`` ticks after the rebalance (0 keeps
-        the legacy free-migration model).
+    steal_cost : migration delay in ticks *per KV page moved* (prompt
+        re-transfer, plus any kept pages a preempted holder carries): a
+        migrated entry becomes runnable on the thief only
+        ``steal_cost × pages_moved`` ticks after the rebalance (0 keeps the
+        free-migration model). Total charged delay and pages appear in
+        ``ClusterStats.steal_delay`` / ``steal_pages``.
     admission : optional SLO-aware admission controller (an object with
         ``admit(request, engine, spec, now) -> bool``, e.g.
         :class:`~repro.serving.adaptation.AdmissionController`): requests it
@@ -156,6 +167,7 @@ class Cluster:
         self.admission = admission
         self.stolen = 0
         self.steal_delay = 0
+        self.steal_pages = 0
         self.rejected_requests: List[Request] = []
         self.engines = [
             SimEngine(policy=policy, predictor=None, vectorized=vectorized,
@@ -167,9 +179,10 @@ class Cluster:
 
     @classmethod
     def uniform(cls, n_replicas: int, max_slots: int, kv_budget: int,
-                policy: Policy, **kw) -> "Cluster":
+                policy: Policy, page_size: int = 1, **kw) -> "Cluster":
         """Homogeneous fleet — the pre-heterogeneity constructor shape."""
-        spec = ReplicaSpec(max_slots=max_slots, kv_budget=kv_budget)
+        spec = ReplicaSpec(max_slots=max_slots, kv_budget=kv_budget,
+                           page_size=page_size)
         return cls([spec] * n_replicas, policy, **kw)
 
     # -- dispatch ------------------------------------------------------------
@@ -232,13 +245,24 @@ class Cluster:
                                    fit=self.specs[thief].kv_budget)
         for r in moved:
             r.replica = thief
-        if self.steal_cost > 0:
-            # migration isn't free: the stolen entries only become runnable
-            # on the thief steal_cost ticks from now (KV/prompt re-transfer)
-            t_eng.submit(moved, after=t_eng.t + self.steal_cost)
-            self.steal_delay += self.steal_cost * len(moved)
-        else:
-            t_eng.submit(moved)
+            # pages moved: a keep-mode holder carries its kept prompt+progress
+            # KV pages; a plain queued request — or a holder whose handoff
+            # the thief's pool refuses (pages dropped, recompute there) —
+            # only re-transfers its prompt
+            held_pages = r.held // d_eng.kv.page_size if r.held else 0
+            d_eng.export_held(r)
+            pages = held_pages if t_eng.adopt_held(r) \
+                else d_eng.kv.pages_for(r.prompt_len)
+            self.steal_pages += pages
+            if self.steal_cost > 0:
+                # migration isn't free: the stolen entry only becomes
+                # runnable on the thief after a delay proportional to the
+                # KV pages it moves (steal_cost ticks per page)
+                delay = self.steal_cost * pages
+                t_eng.submit([r], after=t_eng.t + delay)
+                self.steal_delay += delay
+            else:
+                t_eng.submit([r])
         self.stolen += len(moved)
 
     # -- adaptation feedback (closed loop) -----------------------------------
@@ -276,6 +300,7 @@ class Cluster:
         self._rr = 0
         self.stolen = 0
         self.steal_delay = 0
+        self.steal_pages = 0
         self.rejected_requests = []
         self._done_seen = [0] * self.n_replicas
         t = 0.0     # advances in unit ticks (plus integer leaps) from 0.0
@@ -358,8 +383,11 @@ class Cluster:
         done = [r for e in self.engines for r in e.done]
         toks = sum(r.true_len for r in done)
         reserved_steps = sum(e.kv.total_reserved_steps for e in self.engines)
+        asked_steps = sum(e.kv.total_asked_steps for e in self.engines)
         used_steps = sum(e.kv.total_used_steps for e in self.engines)
         waste = (1.0 - used_steps / reserved_steps) if reserved_steps else 0.0
+        frag = (1.0 - asked_steps / reserved_steps) if reserved_steps else 0.0
+        capacity = sum(e.kv.capacity_tokens for e in self.engines)
         per_replica_toks = np.array(
             [sum(r.true_len for r in e.done) for e in self.engines], float)
         mean_toks = max(float(per_replica_toks.mean()), 1e-9)
@@ -380,9 +408,14 @@ class Cluster:
             goodput=_goodput(done, t),
             stolen=self.stolen,
             steal_delay=self.steal_delay,
+            steal_pages=self.steal_pages,
             rejected=len(self.rejected_requests),
             refreshes=adapter.refreshes if adapter is not None else 0,
             balance=float(per_replica_toks.max()) / mean_toks,
+            occupancy=reserved_steps / (max(t, 1.0) * max(capacity, 1)),
+            frag_ratio=frag,
+            held_peak=sum(e._held_peak for e in self.engines),
+            recompute_ticks=sum(e.recompute_ticks for e in self.engines),
             replica_rows=[e.stats().row() for e in self.engines],
             **_latency_stats(done),
         )

@@ -56,11 +56,15 @@ class ReplicaSpec:
     prefill_tokens_per_step : prompt tokens one prefill tick processes; an
         admitted slot spends ``ceil(prompt / rate)`` ticks prefilling before
         its first decode token. 0 keeps the legacy free-prefill model.
+    page_size : KV-cache page granularity in tokens; reservations are whole
+        pages (``kv_budget`` must be page-aligned). 1 reproduces the scalar
+        token counter bit-exactly.
     """
     max_slots: int
     kv_budget: int
     speed: int = 1
     prefill_tokens_per_step: int = 0
+    page_size: int = 1
 
     def __post_init__(self):
         if self.max_slots <= 0 or self.kv_budget <= 0:
@@ -69,6 +73,10 @@ class ReplicaSpec:
             raise ValueError(f"speed must be a positive integer, got {self.speed}")
         if self.prefill_tokens_per_step < 0:
             raise ValueError("prefill_tokens_per_step must be >= 0")
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if self.kv_budget % self.page_size:
+            raise ValueError("kv_budget must be a multiple of page_size")
 
     @property
     def service_rate(self) -> float:
@@ -98,6 +106,15 @@ class ServeStats:
     timed_out: int = 0
     slo_violations: int = 0        # completed, but past the deadline
     goodput: float = 0.0           # within-SLO completed tokens / step
+    # paged-KV accounting (page_size=1 ⇒ occupancy of the scalar pool,
+    # frag_ratio == 0, and the held_* columns are 0 unless preempt_mode="keep")
+    page_size: int = 1
+    occupancy: float = 0.0         # mean reserved fraction of the pool
+    frag_ratio: float = 0.0        # page-rounding slack / reserved integral
+    held_peak: int = 0             # peak tokens held by preempted waiters
+    held_steps: float = 0.0        # token-steps held while preempted-queued
+    held_releases: int = 0         # held pages dropped to break memory stalls
+    recompute_ticks: int = 0       # prefill ticks re-paid for preempted work
 
     def row(self) -> dict:
         return self.__dict__.copy()
@@ -137,11 +154,24 @@ class SimEngine:
        :class:`ReplicaSpec`) emitting nothing;
     2. *preempt* (SRTF policies): the ready request with the shortest
        predicted remaining length evicts the longest-remaining active slot
-       when the gap exceeds ``preempt_factor`` (progress is kept);
+       when the gap exceeds ``preempt_factor`` (progress is kept). Under
+       ``Policy.preempt_mode="recompute"`` the victim's whole reservation is
+       released and resume re-reserves — and re-prefills — from scratch;
+       under ``"keep"`` the victim shrinks its reservation to the pages it
+       has already filled and *holds* them while queued, so resume reserves
+       only the delta pages and skips the prefill recompute (a victim still
+       in prefill always recomputes — its pages hold no finished work yet);
     3. *decode*: every active non-prefilling slot emits ``spec.speed``
        tokens. A slot that would outgrow its reservation first grows it by
        max(25%, 16, speed) tokens; if the budget refuses, the slot emits
        only what fits (possibly nothing) this tick and retries next tick.
+
+    Held pages count toward the reservation integral but not the usage one:
+    the waste/occupancy metrics price exactly the memory that keep-mode
+    preemption pins while its owner waits. When every slot is idle or
+    stalled *because* queued holders pin the pool, the engine releases held
+    pages (largest-queue-key holders first — ``held_releases``), reverting
+    those requests to recompute semantics rather than deadlocking.
     """
 
     def __init__(self, max_slots: Optional[int] = None,
@@ -167,13 +197,20 @@ class SimEngine:
     # -- lifecycle -----------------------------------------------------------
 
     def reset(self):
-        self.kv = KVCacheManager(budget_tokens=self._kv_budget)
+        self.kv = KVCacheManager(budget_tokens=self._kv_budget,
+                                 page_size=self.spec.page_size)
         self.t = 0.0
         self.preemptions = 0
         self.oom_evictions = 0
         self.dropped = 0
         self.timed_out = 0
         self.slo_violations = 0
+        self.recompute_ticks = 0
+        self.held_releases = 0
+        self._held_tokens = 0       # Σ tokens held by preempted waiters here
+        self._held_ready = 0        # the ready-queue (releasable) part
+        self._held_peak = 0
+        self._held_steps = 0.0
         self._progress = True       # did the last decode tick advance any slot?
         self._seq = 0                       # heap tie-break, FIFO among ties
         self._future: list = []             # (due tick, seq, Request)
@@ -201,16 +238,26 @@ class SimEngine:
     def _order_key(self, r: Request) -> float:
         return order_key(r, self.policy.order)
 
+    @staticmethod
+    def _queue_need(r: Request) -> int:
+        """Incremental KV a queued request still needs to start: its full
+        reservation, minus the pages a keep-mode preemption left it holding
+        (those already sit in ``kv.reserved_now``, so counting them again
+        would double-bill every router/steal/admission signal)."""
+        return max(0, int(r.prompt_len + r.reserve_len) - r.held)
+
     def _push_ready(self, r: Request):
         self._seq += 1
         heapq.heappush(self._ready, (self._order_key(r), self._seq, r))
-        self._ready_need += int(r.prompt_len + r.reserve_len)
+        self._ready_need += self._queue_need(r)
         self._ready_pred += predicted_remaining(r)
+        self._held_ready += r.held
 
     def _forget_ready(self, r: Request):
         """Undo _push_ready's aggregate accounting for a departing entry."""
-        self._ready_need -= int(r.prompt_len + r.reserve_len)
+        self._ready_need -= self._queue_need(r)
         self._ready_pred -= predicted_remaining(r)
+        self._held_ready -= r.held
 
     def _pop_ready(self) -> Request:
         _, _, r = heapq.heappop(self._ready)
@@ -231,7 +278,7 @@ class SimEngine:
             if due > self.t:
                 self._seq += 1
                 heapq.heappush(self._future, (due, self._seq, r))
-                self._future_need += int(r.prompt_len + r.reserve_len)
+                self._future_need += self._queue_need(r)
                 self._future_pred += predicted_remaining(r)
             else:
                 self._push_ready(r)
@@ -284,9 +331,11 @@ class SimEngine:
         steals the tail). ``mode='quantile'`` is the ProD-aware variant: it
         takes the requests with the largest predicted-quantile remaining work
         (``reserve_len`` − progress), moving the most token-load per steal.
-        ``fit`` restricts stealing to requests whose reservation need fits
-        that budget (the thief's KV pool), so migration never strands an
-        oversized request on a small replica.
+        ``fit`` restricts stealing to requests whose full reservation need
+        fits that budget (the thief's KV pool) — a keep-mode holder's kept
+        pages migrate with it and are re-reserved out of the thief's pool,
+        so its delta need alone would understate feasibility and strand an
+        oversized request on a small replica (dropped on arrival).
         """
         if k <= 0 or not self._ready:
             return []
@@ -314,16 +363,50 @@ class SimEngine:
             self._forget_ready(r)
         return out
 
+    # -- partial-reservation handoff (keep-mode pages crossing replicas) -----
+
+    def export_held(self, r: Request) -> int:
+        """Donor side of a page handoff: the migrating request's kept pages
+        leave this replica's pool (their contents travel with the steal).
+        Returns the token count that left."""
+        held = r.held
+        if held:
+            self.kv.release(r.rid)
+            self._held_tokens -= held
+        return held
+
+    def adopt_held(self, r: Request) -> bool:
+        """Thief side of a page handoff: re-reserve the migrated pages in
+        this pool, re-rounded to this replica's page size. On failure the
+        pages are dropped and the request reverts to recompute semantics
+        (progress tokens kept, prefill re-paid)."""
+        if not r.held:
+            return False
+        if self.kv.admit(r.rid, r.held):
+            r.held = self.kv.reserved[r.rid]
+            self._held_tokens += r.held
+            self._held_peak = max(self._held_peak, self._held_tokens)
+            return True
+        r.held = 0
+        return False
+
     # -- one engine tick -----------------------------------------------------
 
     def _prefill_ticks(self, r: Request) -> int:
-        """Admission cost: ceil(prompt tokens / prefill rate). Resumed
-        (preempted) requests recompute prompt + generated progress — vLLM
-        recompute-preemption semantics."""
+        """Admission cost: ceil(prompt tokens / prefill rate). A resumed
+        request that kept its pages (``r.held``) has its prompt + progress
+        KV already resident — no recompute. One that lost them recomputes
+        prompt + generated progress (vLLM recompute-preemption semantics);
+        that whole resume charge is re-work, counted in ``recompute_ticks``."""
         pts = self.spec.prefill_tokens_per_step
         if pts <= 0:
             return 0
-        return -(-(r.prompt_len + r.generated) // pts)
+        if r.held > 0:
+            return 0
+        ticks = -(-(r.prompt_len + r.generated) // pts)
+        if r.generated > 0:
+            self.recompute_ticks += ticks
+        return ticks
 
     def _expire_ready_head(self):
         """Drop ready-queue heads that can never start here: reservation need
@@ -333,31 +416,80 @@ class SimEngine:
         deadline passed (``timed_out`` — includes preempted requests waiting
         to resume; their progress is discarded). Only the head is checked
         (lazy TTL): entries deeper in the queue are dropped when they
-        surface, so router load signals may transiently count them."""
+        surface, so router load signals may transiently count them. A
+        departing entry's held pages are released here — and only here, when
+        it actually times out or proves unservable."""
         while self._ready:
             r = self._ready[0][2]
-            if int(r.prompt_len + r.reserve_len) > self.kv.budget_tokens:
+            need = int(r.prompt_len + r.reserve_len)
+            if self.kv.pages_for(need) > self.kv.pages_total:
                 self._pop_ready()
+                self._drop_held(r)
                 self.dropped += 1
                 continue
             if r.deadline is None or r.deadline >= self.t:
                 break
             self._pop_ready()
+            self._drop_held(r)
             self.timed_out += 1
             self._timed_out.append(r)
+
+    def _drop_held(self, r: Request):
+        """Release the pages a departing (timed-out/dropped/stall-broken)
+        holder was keeping. Call after the entry left the ready queue."""
+        if r.held:
+            self.kv.release(r.rid)
+            self._held_tokens -= r.held
+            r.held = 0
+
+    def _release_queued_held(self, spare: Optional[Request] = None,
+                             need: Optional[int] = None,
+                             max_n: Optional[int] = None) -> int:
+        """Break a held-pages memory stall: release the pages of ready-queue
+        holders — largest (policy key, seq) first, i.e. the entries this
+        queue would serve last — reverting them to recompute semantics.
+        With ``spare``/``need`` set, stop as soon as ``spare`` fits;
+        ``max_n`` caps how many holders are sacrificed per call. Returns how
+        many were released."""
+        released = 0
+        for _, _, r in sorted(self._ready, reverse=True):
+            if r.held == 0 or r is spare:
+                continue
+            before = self._queue_need(r)
+            self.kv.release(r.rid)
+            self._held_tokens -= r.held
+            self._held_ready -= r.held
+            r.held = 0
+            self._ready_need += self._queue_need(r) - before
+            self.held_releases += 1
+            released += 1
+            if max_n is not None and released >= max_n:
+                break
+            if (spare is not None
+                    and self.kv.can_reserve(spare.rid, need)):
+                break
+        return released
 
     def _admit(self):
         while self._future and self._future[0][0] <= self.t:
             _, _, r = heapq.heappop(self._future)
-            self._future_need -= int(r.prompt_len + r.reserve_len)
+            self._future_need -= self._queue_need(r)
             self._future_pred -= predicted_remaining(r)
             self._push_ready(r)
         self._expire_ready_head()
         while self._n_active < self.max_slots and self._ready:
             _, _, cand = self._ready[0]
             need = int(cand.prompt_len + cand.reserve_len)
-            if not self.kv.admit(cand.rid, need):
-                break  # KV-bound: head-of-line blocks on memory
+            if not self.kv.can_reserve(cand.rid, need):
+                # nothing active to free memory, yet queued holders pin the
+                # pool: release their pages (recompute for them) so the head
+                # can start — without this, keep mode can wedge the queue
+                if not (self._n_active == 0
+                        and self._held_ready > cand.held
+                        and self._release_queued_held(cand, need)
+                        and self.kv.can_reserve(cand.rid, need)):
+                    break  # KV-bound: head-of-line blocks on memory
+            self.kv.reserve(cand.rid, need)   # full need, or delta if holding
             self._pop_ready()
             if cand.t_start is None:
                 cand.t_start = self.t
@@ -365,13 +497,16 @@ class SimEngine:
             self._slots.append(cand)
             self._a_gen[i] = cand.generated      # preempted resume w/ progress
             self._a_used[i] = cand.prompt_len + cand.generated
-            self._a_res[i] = need
+            self._a_res[i] = self.kv.reserved[cand.rid]  # page-rounded grant
             self._a_plen[i] = cand.prompt_len
             self._a_tlen[i] = cand.true_len
             self._a_pref[i] = self._prefill_ticks(cand)
             self._a_pred[i] = (cand.predicted_len
                                if cand.predicted_len is not None
                                else float(cand.true_len))
+            if cand.held:                        # kept pages now active again
+                self._held_tokens -= cand.held
+                cand.held = 0
             self._used_sum += int(self._a_used[i])
             self._n_active += 1
             self._expire_ready_head()
@@ -389,7 +524,16 @@ class SimEngine:
         if rem[v] > self.policy.preempt_factor * predicted_remaining(newcomer):
             victim = self._slots[v]
             victim.generated = int(self._a_gen[v])
-            self.kv.release(victim.rid)
+            if self.policy.preempt_mode == "keep" and self._a_pref[v] == 0:
+                # keep-pages: shrink to the filled pages and hold them, so
+                # resume reserves only the delta and skips the prefill
+                # recompute. A victim still prefilling has nothing finished
+                # in its pages yet, so it always takes the recompute path.
+                victim.held = self.kv.shrink(victim.rid, int(self._a_used[v]))
+                self._held_tokens += victim.held
+                self._held_peak = max(self._held_peak, self._held_tokens)
+            else:
+                self.kv.release(victim.rid)
             self._used_sum -= int(self._a_used[v])
             self._drop_slot(v)
             self._push_ready(victim)   # resumes later with progress kept
@@ -442,7 +586,12 @@ class SimEngine:
                 if self.kv.grow(r.rid, max(int(0.25 * res), 16, sp)):
                     self._a_res[i] = self.kv.reserved[r.rid]
                     r.overflows += 1
-                else:
+                    # the paged grow grants whole pages, which (for
+                    # page_size < speed) can still fall short of emit:
+                    # re-clamp so a slot never emits past its granted pages
+                    head = int(self._a_res[i]) \
+                        - int(self._a_plen[i] + self._a_gen[i])
+                if emit > head:
                     emit = head     # partial; 0 == stalled this tick
             if emit <= 0:
                 i += 1
@@ -467,7 +616,14 @@ class SimEngine:
         past its current progress so its re-admission can emit tokens —
         clamped to the pool size so the request stays admittable. A victim
         whose clamped ask buys no headroom needs more KV than the whole pool
-        holds: it can never finish under any policy, so it is dropped."""
+        holds: it can never finish under any policy, so it is dropped.
+
+        When queued keep-mode holders pin part of the pool, one holder's
+        pages are released per stall tick instead (cheaper: that request
+        merely falls back to recompute, and the rest keep their pages);
+        eviction retries next tick if decode is still stuck."""
+        if self._held_ready > 0 and self._release_queued_held(max_n=1):
+            return
         v = self._n_active - 1
         victim = self._slots[v]
         victim.generated = int(self._a_gen[v])
@@ -524,7 +680,9 @@ class SimEngine:
             self._decode_tick_ref()
         # reservation/usage integrals (waste metric), kept on the KV manager
         self.kv.total_reserved_steps += self.kv.reserved_now
+        self.kv.total_asked_steps += self.kv.asked_now
         self.kv.total_used_steps += self._used_sum
+        self._held_steps += self._held_tokens
 
     def advance_to(self, t: float):
         """Idle-skip the clock (no decode work in between)."""
@@ -547,9 +705,13 @@ class SimEngine:
         if self._ready:
             cand = self._ready[0][2]
             need = int(cand.prompt_len + cand.reserve_len)
-            if need > self.kv.budget_tokens:
+            if self.kv.pages_for(need) > self.kv.pages_total:
                 return 1.0   # unservable-head drop fires next tick
-            if self._n_active < self.max_slots and self.kv.can_admit(need):
+            if self._n_active < self.max_slots and (
+                    self.kv.can_reserve(cand.rid, need)
+                    # conservative: the held-pages stall breaker may free
+                    # enough for the head — let the real step decide
+                    or (self._n_active == 0 and self._held_ready > cand.held)):
                 return 1.0   # admission fires next tick
             if cand.deadline is not None:
                 # head expires at the first tick with t > deadline
@@ -595,6 +757,8 @@ class SimEngine:
             rate = 0
         self.kv.total_used_steps += q * self._used_sum + rate * q * (q + 1) // 2
         self.kv.total_reserved_steps += q * self.kv.reserved_now
+        self.kv.total_asked_steps += q * self.kv.asked_now
+        self._held_steps += q * self._held_tokens
         self._used_sum += rate * q
         self.t += float(q)
 
@@ -629,6 +793,7 @@ class SimEngine:
 
     def stats(self) -> ServeStats:
         toks = sum(r.true_len for r in self._done)
+        denom = max(self.t, 1.0) * max(self.kv.capacity_tokens, 1)
         return ServeStats(
             policy=f"{self.policy.order}+{self.policy.reserve}",
             makespan=self.t,
@@ -643,6 +808,13 @@ class SimEngine:
             timed_out=self.timed_out,
             slo_violations=self.slo_violations,
             goodput=_goodput(self._done, self.t),
+            page_size=self.kv.page_size,
+            occupancy=self.kv.total_reserved_steps / denom,
+            frag_ratio=self.kv.frag_ratio,
+            held_peak=self._held_peak,
+            held_steps=self._held_steps,
+            held_releases=self.held_releases,
+            recompute_ticks=self.recompute_ticks,
             **_latency_stats(self._done),
         )
 

@@ -1,64 +1,237 @@
-"""KV-cache reservation accounting (the paper's §4 serving motivation).
+"""Paged KV-cache reservation accounting (the paper's §4 serving motivation).
 
 Serving frameworks that reserve for the *maximum possible* output waste memory
 and cap the batch; reserving for the *predicted* output admits more concurrent
 requests but risks overflow re-reservations. This manager tracks both costs so
 the benchmark can quantify the trade-off that length prediction buys.
+
+The pool is **page-granular** (vLLM-style): ``budget_tokens`` is split into
+``budget_tokens // page_size`` pages and every reservation is a whole number
+of pages. A request that asks for ``n`` tokens is *granted*
+``ceil(n / page_size) * page_size`` tokens; the ask is remembered separately
+so the page-rounding slack shows up as **internal fragmentation**
+(:attr:`frag_ratio`). ``page_size=1`` reproduces the original scalar token
+counter bit-exactly — every comparison reduces to the same integer
+arithmetic — which is what lets the engine's vectorized-vs-reference golden
+tests anchor the paged rewrite.
+
+Page-granular accounting is what makes **partial-reservation handoff**
+possible: a preempted request can :meth:`shrink` its reservation down to the
+pages it has already filled and keep holding them while it waits to resume
+(``Policy.preempt_mode="keep"``), instead of releasing everything and
+re-reserving — and re-prefilling — from scratch.
+
+Accounting is O(1) per operation (page *counts*, not page IDs). Pass
+``track_pages=True`` to additionally materialize an explicit free-page stack
+and per-request page tables — O(pages) per op, used by the allocator property
+tests (no page leaked or double-assigned) and by the external-fragmentation
+probe :meth:`fragmentation`.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, List, Optional
 
 
 @dataclass
 class KVCacheManager:
     budget_tokens: int                       # total KV slots across the pool
-    reserved: Dict[int, int] = field(default_factory=dict)
+    page_size: int = 1                       # tokens per page (1 = scalar mode)
+    track_pages: bool = False                # materialize page IDs (tests)
+    reserved: Dict[int, int] = field(default_factory=dict)  # rid -> granted
+    asked: Dict[int, int] = field(default_factory=dict)     # rid -> requested
     used: Dict[int, int] = field(default_factory=dict)
-    reserved_now: int = 0                    # Σ reserved, kept incrementally
+    reserved_now: int = 0                    # Σ granted tokens, incremental
+    asked_now: int = 0                       # Σ asked tokens, incremental
+    used_now: int = 0                        # Σ used tokens, incremental
     peak_reserved: int = 0
     overflow_events: int = 0
     total_reserved_steps: float = 0.0        # token-steps of reservation
+    total_asked_steps: float = 0.0           # token-steps actually asked for
     total_used_steps: float = 0.0
+    page_table: Dict[int, List[int]] = field(default_factory=dict)
+    _free_ids: List[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.pages_total = self.budget_tokens // self.page_size
+        self.pages_free = self.pages_total
+        if self.track_pages:
+            # LIFO free stack: churn scrambles it, so page tables genuinely
+            # fragment — what the fragmentation() probe measures
+            self._free_ids = list(range(self.pages_total - 1, -1, -1))
+
+    # -- page math -----------------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` (ceil division)."""
+        return -(-int(n_tokens) // self.page_size)
+
+    def pages_of(self, rid: int) -> int:
+        """Pages currently granted to ``rid`` (0 if unknown)."""
+        return self.reserved.get(rid, 0) // self.page_size
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Usable pool size: whole pages only (== budget when aligned)."""
+        return self.pages_total * self.page_size
+
+    @property
+    def pages_reserved(self) -> int:
+        return self.pages_total - self.pages_free
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of the pool's pages currently reserved."""
+        if self.pages_total == 0:
+            return 0.0
+        return self.pages_reserved / self.pages_total
+
+    # -- allocation ----------------------------------------------------------
+
+    def _take_pages(self, rid: int, k: int):
+        self.pages_free -= k
+        if self.track_pages:
+            tbl = self.page_table.setdefault(rid, [])
+            for _ in range(k):
+                tbl.append(self._free_ids.pop())
+
+    def _give_pages(self, rid: int, k: int):
+        self.pages_free += k
+        if self.track_pages:
+            tbl = self.page_table.get(rid, [])
+            for _ in range(k):
+                self._free_ids.append(tbl.pop())
+            if not tbl:
+                self.page_table.pop(rid, None)
 
     def can_admit(self, n_tokens: int) -> bool:
-        return self.reserved_now + n_tokens <= self.budget_tokens
+        return self.pages_for(n_tokens) <= self.pages_free
 
     def admit(self, rid: int, n_tokens: int) -> bool:
-        if not self.can_admit(n_tokens):
+        k = self.pages_for(n_tokens)
+        if k > self.pages_free:
             return False
-        self.reserved[rid] = n_tokens
+        self._take_pages(rid, k)
+        self.reserved[rid] = k * self.page_size
+        self.asked[rid] = int(n_tokens)
         self.used[rid] = 0
-        self.reserved_now += n_tokens
+        self.reserved_now += k * self.page_size
+        self.asked_now += int(n_tokens)
         self.peak_reserved = max(self.peak_reserved, self.reserved_now)
         return True
 
     def grow(self, rid: int, extra: int) -> bool:
-        """Overflow: the request outgrew its reservation (mispredicted short)."""
-        if self.reserved_now + extra > self.budget_tokens:
+        """Overflow: the request outgrew its reservation (mispredicted short).
+        Grants whole pages. The previous grant's page-rounding slack may
+        absorb part of ``extra``, but a successful grow always adds at least
+        one page — the caller only grows when out of granted space, and a
+        zero-page "success" would let it emit past its reservation."""
+        want = max(self.asked[rid] + int(extra), self.reserved[rid] + 1)
+        delta = self.pages_for(want) - self.pages_of(rid)
+        if delta > self.pages_free:
             return False
-        self.reserved[rid] += extra
-        self.reserved_now += extra
+        self._take_pages(rid, delta)
+        self.reserved[rid] += delta * self.page_size
+        self.reserved_now += delta * self.page_size
+        self.asked_now += want - self.asked[rid]
+        self.asked[rid] = want
         self.overflow_events += 1
         self.peak_reserved = max(self.peak_reserved, self.reserved_now)
         return True
 
+    # -- partial-reservation handoff (keep-pages preemption) -----------------
+
+    def shrink(self, rid: int, keep_tokens: int) -> int:
+        """Release every page beyond ``ceil(keep_tokens / page_size)`` —
+        a preempted request keeping the pages it has already filled. Never
+        grows. Returns the new granted token count (page-rounded)."""
+        keep = min(max(0, int(keep_tokens)), self.reserved[rid])
+        k = self.pages_for(keep)
+        self._give_pages(rid, self.pages_of(rid) - k)
+        self.reserved_now -= self.reserved[rid] - k * self.page_size
+        self.asked_now += keep - self.asked[rid]
+        self.reserved[rid] = k * self.page_size
+        self.asked[rid] = keep
+        if self.used.get(rid, 0) > keep:     # content beyond the kept pages
+            self.used_now -= self.used[rid] - keep
+            self.used[rid] = keep
+        return self.reserved[rid]
+
+    def can_reserve(self, rid: int, n_tokens: int) -> bool:
+        """Admission feasibility: delta pages for a partial holder, full
+        pages otherwise."""
+        have = self.pages_of(rid) if rid in self.reserved else 0
+        return self.pages_for(n_tokens) - have <= self.pages_free
+
+    def reserve(self, rid: int, n_tokens: int) -> bool:
+        """Unified admission: a fresh request reserves its full need; a
+        holder (preempted with kept pages) reserves only the *delta* pages on
+        top of what it already holds. Not counted as an overflow."""
+        if rid not in self.reserved:
+            return self.admit(rid, n_tokens)
+        want = max(int(n_tokens), self.asked[rid])
+        delta = self.pages_for(want) - self.pages_of(rid)
+        if delta > self.pages_free:
+            return False
+        self._take_pages(rid, delta)
+        self.reserved[rid] += delta * self.page_size
+        self.reserved_now += delta * self.page_size
+        self.asked_now += want - self.asked[rid]
+        self.asked[rid] = want
+        self.peak_reserved = max(self.peak_reserved, self.reserved_now)
+        return True
+
+    # -- usage / release -----------------------------------------------------
+
     def use(self, rid: int, n_tokens: int = 1):
         self.used[rid] = self.used.get(rid, 0) + n_tokens
+        self.used_now += n_tokens
 
     def tick(self):
-        """Accumulate per-step reservation/usage integrals (waste metric)."""
+        """Accumulate per-step reservation/usage integrals (waste metric).
+        O(1): the per-rid sums are kept incrementally in ``use``/``release``
+        instead of re-summing the dicts in the hottest loop."""
         self.total_reserved_steps += self.reserved_now
-        self.total_used_steps += sum(self.used.values())
+        self.total_asked_steps += self.asked_now
+        self.total_used_steps += self.used_now
 
     def release(self, rid: int):
-        self.reserved_now -= self.reserved.pop(rid, 0)
-        self.used.pop(rid, None)
+        granted = self.reserved.pop(rid, 0)
+        self._give_pages(rid, granted // self.page_size)
+        self.reserved_now -= granted
+        self.asked_now -= self.asked.pop(rid, 0)
+        self.used_now -= self.used.pop(rid, 0)
+
+    # -- metrics -------------------------------------------------------------
 
     @property
     def waste_ratio(self) -> float:
         if self.total_reserved_steps == 0:
             return 0.0
         return 1.0 - self.total_used_steps / self.total_reserved_steps
+
+    @property
+    def frag_ratio(self) -> float:
+        """Internal fragmentation: the fraction of reserved token-steps that
+        is page-rounding slack (granted − asked). 0 at ``page_size=1``."""
+        if self.total_reserved_steps == 0:
+            return 0.0
+        return 1.0 - self.total_asked_steps / self.total_reserved_steps
+
+    def fragmentation(self) -> float:
+        """External fragmentation of the free list (``track_pages`` only):
+        1 − largest contiguous free run / free pages. 0 when the free space
+        is one run (or the pool is full)."""
+        if not self.track_pages:
+            raise ValueError("fragmentation() needs track_pages=True")
+        if not self._free_ids:
+            return 0.0
+        ids = sorted(self._free_ids)
+        best = run = 1
+        for a, b in zip(ids, ids[1:]):
+            run = run + 1 if b == a + 1 else 1
+            best = max(best, run)
+        return 1.0 - best / len(ids)

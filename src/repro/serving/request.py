@@ -36,6 +36,11 @@ class Request:
     t_finish: Optional[float] = None
     generated: int = 0
     overflows: int = 0
+    # keep-mode preemption: tokens of KV pages this (queued) request still
+    # holds — page-rounded grant covering prompt + generated progress. The
+    # pages live in one replica's pool; work stealing hands them off
+    # (export_held/adopt_held) or drops them back to 0 (recompute)
+    held: int = 0
 
     @property
     def wait(self) -> float:
@@ -59,7 +64,8 @@ class Request:
         the engine. This replaces the brittle ``Request(**r.__dict__)``
         pattern, which silently breaks on non-init fields."""
         return dataclasses.replace(self, replica=None, t_start=None,
-                                   t_finish=None, generated=0, overflows=0)
+                                   t_finish=None, generated=0, overflows=0,
+                                   held=0)
 
 
 def workload_from_scenario(

@@ -35,6 +35,7 @@ from repro.serving.request import Request
 
 ORDERINGS = ("fcfs", "sjf_pred", "sjf_oracle", "srtf_pred", "edf", "laxity")
 RESERVES = ("max", "predicted", "quantile", "oracle")
+PREEMPT_MODES = ("recompute", "keep")
 
 
 @dataclass(frozen=True)
@@ -52,6 +53,11 @@ class Policy:
         shorter request waits.
     preempt_factor : preempt only if the victim's predicted remaining exceeds
         this multiple of the newcomer's.
+    preempt_mode : what happens to the victim's KV reservation, one of
+        :data:`PREEMPT_MODES`. ``"recompute"`` releases it all and resume
+        re-reserves — and re-prefills — from scratch; ``"keep"`` retains the
+        pages the victim already filled (paged KV), so resume reserves only
+        the delta pages and skips the prefill recompute.
     """
 
     order: str = "fcfs"            # see ORDERINGS
@@ -61,6 +67,12 @@ class Policy:
     max_seq_len: int = 4096
     preempt: bool = False          # srtf: evict the longest-remaining active
     preempt_factor: float = 2.0    # only if its remaining > factor × newcomer's
+    preempt_mode: str = "recompute"   # see PREEMPT_MODES
+
+    def __post_init__(self):
+        if self.preempt_mode not in PREEMPT_MODES:
+            raise ValueError(
+                f"preempt_mode {self.preempt_mode!r} not in {PREEMPT_MODES}")
 
 
 def predicted_remaining(r: Request) -> float:

@@ -1,10 +1,13 @@
-"""Property-based invariants for the KV reservation allocator.
+"""Property-based invariants for the paged KV reservation allocator.
 
-Random reserve/grow/use/free/preempt op sequences, replayed against
-:class:`~repro.serving.kvcache.KVCacheManager` with a shadow model, must
-never exceed the pool, never corrupt the scalar counter on double-free, and
-keep the usage integral below the reservation integral — the invariants the
-engine's waste metric and admission control rest on. Runs under real
+Random admit/grow/use/shrink (preempt-keep)/reserve (delta resume)/release/
+steal op sequences, replayed against
+:class:`~repro.serving.kvcache.KVCacheManager`, must never exceed the pool,
+never leak or double-assign a page, never corrupt the incremental counters
+on double-free, and keep the usage integral below the reservation integral —
+the invariants the engine's waste metric and admission control rest on. A
+shadow reimplementation of the pre-paged scalar manager pins ``page_size=1``
+to the original token-counter semantics bit-exactly. Runs under real
 ``hypothesis`` when installed, else the seeded example sweep in
 ``tests/_hypothesis_compat.py``.
 """
@@ -120,3 +123,212 @@ class TestKVCacheProperties:
         assert kv.reserved_now == 0
         assert kv.reserved == {} and kv.used == {}
         assert kv.total_used_steps <= kv.total_reserved_steps
+
+
+# ---------------------------------------------------------------------------
+# paged allocator: page conservation, handoff ops, and scalar equivalence
+# ---------------------------------------------------------------------------
+
+
+class _OldScalarKV:
+    """Shadow reimplementation of the pre-paged scalar token counter (the
+    seed ``KVCacheManager``), kept verbatim so the ``page_size=1`` manager
+    can be pinned to it decision-for-decision and counter-for-counter."""
+
+    def __init__(self, budget_tokens):
+        self.budget_tokens = budget_tokens
+        self.reserved = {}
+        self.used = {}
+        self.reserved_now = 0
+        self.peak_reserved = 0
+        self.overflow_events = 0
+        self.total_reserved_steps = 0.0
+        self.total_used_steps = 0.0
+
+    def can_admit(self, n):
+        return self.reserved_now + n <= self.budget_tokens
+
+    def admit(self, rid, n):
+        if not self.can_admit(n):
+            return False
+        self.reserved[rid] = n
+        self.used[rid] = 0
+        self.reserved_now += n
+        self.peak_reserved = max(self.peak_reserved, self.reserved_now)
+        return True
+
+    def grow(self, rid, extra):
+        if self.reserved_now + extra > self.budget_tokens:
+            return False
+        self.reserved[rid] += extra
+        self.reserved_now += extra
+        self.overflow_events += 1
+        self.peak_reserved = max(self.peak_reserved, self.reserved_now)
+        return True
+
+    def use(self, rid, n=1):
+        self.used[rid] = self.used.get(rid, 0) + n
+
+    def tick(self):
+        self.total_reserved_steps += self.reserved_now
+        self.total_used_steps += sum(self.used.values())
+
+    def release(self, rid):
+        self.reserved_now -= self.reserved.pop(rid, 0)
+        self.used.pop(rid, None)
+
+    @property
+    def waste_ratio(self):
+        if self.total_reserved_steps == 0:
+            return 0.0
+        return 1.0 - self.total_used_steps / self.total_reserved_steps
+
+
+def _apply_paged_ops(rng, n_ops, kv):
+    """Engine-shaped op stream over the full paged API — admit, grow, use,
+    shrink (keep-mode preempt), reserve (delta resume), release, tick."""
+    live, holding = [], []
+    next_rid = 0
+    for _ in range(n_ops):
+        op = int(rng.integers(0, 7))
+        if op == 0:                                   # admit
+            need = int(rng.integers(1, kv.budget_tokens // 2))
+            if kv.admit(next_rid, need):
+                live.append(next_rid)
+            next_rid += 1
+        elif op == 1 and live:                        # grow (overflow)
+            rid = live[int(rng.integers(0, len(live)))]
+            kv.grow(rid, int(rng.integers(1, 200)))
+        elif op == 2 and live:                        # use within reservation
+            rid = live[int(rng.integers(0, len(live)))]
+            room = kv.reserved[rid] - kv.used.get(rid, 0)
+            if room > 0:
+                kv.use(rid, int(rng.integers(1, room + 1)))
+        elif op == 3 and live:                        # keep-mode preempt
+            rid = live.pop(int(rng.integers(0, len(live))))
+            kv.shrink(rid, int(rng.integers(0, kv.asked[rid] + 1)))
+            holding.append((rid, kv.asked[rid] + int(rng.integers(0, 300))))
+        elif op == 4 and holding:                     # delta resume
+            rid, need = holding.pop(int(rng.integers(0, len(holding))))
+            if kv.reserve(rid, need):
+                live.append(rid)
+            else:
+                holding.append((rid, need))
+        elif op == 5 and (live or holding):           # release / timeout
+            if live and (not holding or rng.integers(0, 2)):
+                rid = live.pop(int(rng.integers(0, len(live))))
+            else:
+                rid, _ = holding.pop(int(rng.integers(0, len(holding))))
+            kv.release(rid)
+        else:                                         # tick
+            kv.tick()
+        yield kv, live, holding
+
+
+class TestPagedAllocator:
+    @given(st.integers(0, 100_000), st.sampled_from([1, 3, 16, 64]))
+    def test_no_page_leaked_or_double_assigned(self, seed, page_size):
+        """Across admit/grow/preempt-keep/resume/release interleavings the
+        explicit page table partitions the pool exactly: every page is in
+        the free list or exactly one request's table."""
+        rng = np.random.default_rng(seed)
+        kv = KVCacheManager(budget_tokens=960, page_size=page_size,
+                            track_pages=True)
+        for kv, live, holding in _apply_paged_ops(rng, 90, kv):
+            owned = [p for tbl in kv.page_table.values() for p in tbl]
+            assert len(owned) == len(set(owned))          # no double assign
+            assert not set(owned) & set(kv._free_ids)     # no page both ways
+            assert len(owned) + len(kv._free_ids) == kv.pages_total  # no leak
+            assert kv.pages_free == len(kv._free_ids)
+            for rid, granted in kv.reserved.items():
+                assert granted == len(kv.page_table.get(rid, [])) * page_size
+                assert kv.asked[rid] <= granted < kv.asked[rid] + page_size \
+                    or (kv.asked[rid] == granted == 0)
+            assert 0.0 <= kv.fragmentation() <= 1.0
+
+    @given(st.integers(0, 100_000), st.sampled_from([1, 5, 32]))
+    def test_incremental_counters_match_dicts(self, seed, page_size):
+        """The O(1) counters tick() relies on (used_now/asked_now/
+        reserved_now) never drift from a full re-sum of the dicts — the
+        hot-loop accounting fix stays exact."""
+        rng = np.random.default_rng(seed)
+        kv = KVCacheManager(budget_tokens=960, page_size=page_size)
+        for kv, live, holding in _apply_paged_ops(rng, 90, kv):
+            assert kv.used_now == sum(kv.used.values())
+            assert kv.asked_now == sum(kv.asked.values())
+            assert kv.reserved_now == sum(kv.reserved.values())
+            # usage may legitimately fill page-rounding slack past the ask,
+            # so used is only bounded by the granted (reserved) integral
+            assert kv.total_used_steps <= kv.total_reserved_steps
+            assert kv.total_asked_steps <= kv.total_reserved_steps
+            assert 0.0 <= kv.frag_ratio <= 1.0
+
+    @given(st.integers(0, 100_000))
+    def test_page_size_one_equals_old_scalar_manager(self, seed):
+        """page_size=1 must reproduce the pre-paged scalar token counter
+        decision-for-decision, counter-for-counter, on the pre-paged op
+        vocabulary (admit/grow/use/release/tick) — including the waste_ratio
+        integral on a golden op trace (the tick() regression: incremental
+        used_now vs the old per-tick re-sum)."""
+        rng = np.random.default_rng(seed)
+        kv = KVCacheManager(budget_tokens=BUDGET, page_size=1)
+        shadow = _OldScalarKV(budget_tokens=BUDGET)
+        live, next_rid = [], 0
+        for _ in range(110):
+            op = int(rng.integers(0, 5))
+            if op == 0:
+                need = int(rng.integers(1, BUDGET // 2))
+                got = kv.admit(next_rid, need)
+                assert shadow.admit(next_rid, need) == got
+                if got:
+                    live.append(next_rid)
+                next_rid += 1
+            elif op == 1 and live:
+                rid = live[int(rng.integers(0, len(live)))]
+                extra = int(rng.integers(1, 200))
+                assert shadow.grow(rid, extra) == kv.grow(rid, extra)
+            elif op == 2 and live:
+                rid = live[int(rng.integers(0, len(live)))]
+                room = kv.reserved[rid] - kv.used.get(rid, 0)
+                if room > 0:
+                    n = int(rng.integers(1, room + 1))
+                    kv.use(rid, n)
+                    shadow.use(rid, n)
+            elif op == 3 and live:
+                rid = live.pop(int(rng.integers(0, len(live))))
+                kv.release(rid)
+                shadow.release(rid)
+            else:
+                kv.tick()
+                shadow.tick()
+            assert kv.reserved_now == shadow.reserved_now
+            assert kv.reserved == shadow.reserved
+            assert kv.used == shadow.used
+            assert kv.peak_reserved == shadow.peak_reserved
+            assert kv.overflow_events == shadow.overflow_events
+            assert kv.total_reserved_steps == shadow.total_reserved_steps
+            assert kv.total_used_steps == shadow.total_used_steps
+            assert kv.waste_ratio == shadow.waste_ratio
+            assert kv.frag_ratio == 0.0       # no page rounding at size 1
+
+    def test_shrink_keeps_filled_pages_and_frees_the_rest(self):
+        kv = KVCacheManager(budget_tokens=128, page_size=16, track_pages=True)
+        assert kv.admit(0, 100)               # 7 pages = 112 tokens granted
+        assert kv.reserved[0] == 112
+        kept = kv.shrink(0, 40)               # filled 40 → keep 3 pages
+        assert kept == 48 == kv.reserved[0]
+        assert kv.pages_free == kv.pages_total - 3
+        assert len(kv.page_table[0]) == 3
+        # delta resume: back to the full ask reserves only the missing pages
+        assert kv.reserve(0, 100)
+        assert kv.reserved[0] == 112 and len(kv.page_table[0]) == 7
+        kv.release(0)
+        assert kv.pages_free == kv.pages_total and kv.page_table == {}
+
+    def test_budget_not_page_aligned_floors_capacity(self):
+        kv = KVCacheManager(budget_tokens=100, page_size=16)
+        assert kv.pages_total == 6 and kv.capacity_tokens == 96
+        assert kv.admit(0, 96)
+        assert not kv.can_admit(1)            # the 4 leftover tokens unusable
+        kv.release(0)
+        assert not kv.admit(1, 97)            # needs 7 pages, pool holds 6

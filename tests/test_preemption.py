@@ -1,0 +1,363 @@
+"""Keep-pages preemption (paged KV) regression suite.
+
+Covers the partial-reservation-handoff tentpole: ``Policy.preempt_mode``
+("recompute" vs "keep"), delta-only resume reservations, skipped prefill
+recompute, page handoff under work stealing, the held-pages stall breaker,
+page-size sweeps — and the cluster-level request-conservation invariant
+``submitted == done + timed_out + rejected + dropped`` that the drop paths
+must uphold. Every new path is asserted bit-identical between the per-slot
+reference and the vectorized event-leap engines.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.serving.adaptation import AdmissionController
+from repro.serving.arrivals import LatentOracle, TraceConfig, make_trace
+from repro.serving.cluster import Cluster
+from repro.serving.engine import ReplicaSpec, SimEngine
+from repro.serving.request import Request
+from repro.serving.scheduler import Policy
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+
+def _trace(n=250, pattern="bursty", rate=1.2, seed=7, **kw):
+    kw.setdefault("max_seq_len", 512)
+    kw.setdefault("model", "mix")
+    kw.setdefault("scenario", "mix")
+    return make_trace(TraceConfig(n_requests=n, pattern=pattern, rate=rate,
+                                  seed=seed, **kw))
+
+
+def _pol(mode="keep", order="srtf_pred"):
+    return Policy(order, "quantile", quantile=0.9, max_seq_len=512,
+                  preempt=True, preempt_mode=mode)
+
+
+def _engine_rows(pol, spec, reqs, **run_kw):
+    rows = {}
+    for vec in (True, False):
+        eng = SimEngine(policy=pol, predictor=LatentOracle(), vectorized=vec,
+                        spec=spec)
+        strow = eng.run(reqs, **run_kw).row()
+        fin = sorted((r.rid, r.t_start, r.t_finish) for r in eng.done)
+        assert eng.kv.reserved_now == 0          # nothing leaked at the end
+        assert eng._held_tokens == 0
+        rows[vec] = (strow, fin)
+    return rows
+
+
+class TestVecRefKeepMode:
+    """The event-leap fast path must stay bit-identical to the per-slot
+    reference on every keep-pages path: shrink-and-hold preemption,
+    delta-only resume, skipped prefill recompute, page handoff — across
+    page sizes and heterogeneous specs."""
+
+    @pytest.mark.parametrize("mode", ["recompute", "keep"])
+    @pytest.mark.parametrize("page_size", [1, 16])
+    def test_engine_vec_matches_ref(self, mode, page_size):
+        reqs = _trace(slo_factor=6.0, slo_floor=100.0)
+        spec = ReplicaSpec(6, 2 * (256 + 512) // 16 * 16, speed=2,
+                           prefill_tokens_per_step=32, page_size=page_size)
+        rows = _engine_rows(_pol(mode), spec, reqs, max_steps=500_000)
+        assert rows[True] == rows[False]
+
+    @pytest.mark.parametrize("mode", ["recompute", "keep"])
+    def test_cluster_vec_matches_ref_with_steal_handoff(self, mode):
+        """Stealing a keep-mode holder migrates its pages (export/adopt) at
+        page-proportional cost — bit-exact in both decode paths."""
+        reqs = _trace(n=400, rate=1.8, seed=11, slo_factor=8.0,
+                      slo_floor=150.0)
+        kv = 2 * (256 + 512) // 16 * 16
+        specs = (ReplicaSpec(4, kv, speed=2, prefill_tokens_per_step=64,
+                             page_size=16),
+                 ReplicaSpec(2, kv // 2, speed=1, prefill_tokens_per_step=32,
+                             page_size=16),
+                 ReplicaSpec(6, 3 * kv // 2, speed=3, page_size=16))
+        rows = {}
+        for vec in (True, False):
+            cl = Cluster(specs, _pol(mode), router="psq",
+                         predictor=LatentOracle(), vectorized=vec,
+                         rebalance_every=25, steal="quantile", steal_cost=1)
+            strow = cl.run(reqs).row()
+            fin = sorted((r.rid, r.t_start, r.t_finish)
+                         for e in cl.engines for r in e.done)
+            rows[vec] = (strow, fin)
+        assert rows[True] == rows[False]
+        assert rows[True][0]["stolen"] > 0
+        assert rows[True][0]["steal_pages"] >= rows[True][0]["stolen"]
+        assert rows[True][0]["steal_delay"] == rows[True][0]["steal_pages"]
+
+    @given(st.integers(0, 10_000))
+    def test_engine_vec_matches_ref_random_keep(self, seed):
+        rng = np.random.default_rng(seed)
+        spec = ReplicaSpec(int(rng.integers(2, 7)),
+                           2 * (256 + 512) // 16 * 16,
+                           speed=int(rng.integers(1, 4)),
+                           prefill_tokens_per_step=int(rng.integers(0, 4))
+                           * 32,
+                           page_size=int(rng.choice([1, 4, 16, 64])))
+        reqs = _trace(n=80, pattern="poisson", rate=0.8, seed=seed,
+                      slo_factor=5.0, slo_floor=64.0)
+        rows = _engine_rows(_pol("keep"), spec, reqs, max_steps=500_000)
+        assert rows[True] == rows[False]
+
+    def test_page_size_one_recompute_matches_legacy_golden(self):
+        """page_size=1 + preempt_mode="recompute" is the seed configuration:
+        the pre-paged golden rows (same-seed, both decode paths, zero paged
+        columns) must reproduce exactly."""
+        reqs = _trace(seed=21, slo_factor=6.0, slo_floor=100.0)
+        spec = ReplicaSpec(6, 2 * (256 + 512), speed=2,
+                           prefill_tokens_per_step=32, page_size=1)
+        rows = _engine_rows(_pol("recompute"), spec, reqs, max_steps=500_000)
+        assert rows[True] == rows[False]
+        row = rows[True][0]
+        assert row["page_size"] == 1
+        assert row["frag_ratio"] == 0.0       # no page rounding
+        assert row["held_peak"] == 0 and row["held_steps"] == 0.0
+        assert row["held_releases"] == 0
+        # the defaulted Policy/ReplicaSpec produce this row: rerunning with
+        # the knobs left entirely unset must be bit-identical
+        base_pol = Policy("srtf_pred", "quantile", quantile=0.9,
+                          max_seq_len=512, preempt=True)
+        base_spec = ReplicaSpec(6, 2 * (256 + 512), speed=2,
+                                prefill_tokens_per_step=32)
+        base = _engine_rows(base_pol, base_spec, reqs, max_steps=500_000)
+        assert base == rows
+
+    def test_keep_equals_recompute_when_preemption_off(self):
+        """No regression when preemption is off: preempt_mode is inert."""
+        reqs = _trace(seed=13, slo_factor=6.0, slo_floor=100.0)
+        spec = ReplicaSpec(6, 2 * (256 + 512), speed=2,
+                           prefill_tokens_per_step=32, page_size=16)
+        rows = {}
+        for mode in ("recompute", "keep"):
+            pol = Policy("sjf_pred", "quantile", quantile=0.9,
+                         max_seq_len=512, preempt=False, preempt_mode=mode)
+            rows[mode] = _engine_rows(pol, spec, reqs, max_steps=500_000)
+        assert rows["recompute"] == rows["keep"]
+
+
+class TestKeepSemantics:
+    def _one_preemption(self, mode, pts=8):
+        """One long request preempted once by one short one, single slot —
+        the minimal deterministic resume scenario."""
+        pol = Policy("srtf_pred", "quantile", max_seq_len=4096, preempt=True,
+                     preempt_mode=mode)
+        spec = ReplicaSpec(1, 1024, prefill_tokens_per_step=pts, page_size=4)
+        long = Request(rid=0, arrival=0.0, prompt_len=64, true_len=200,
+                       predicted_len=200.0, reserve_len=220.0)
+        short = Request(rid=1, arrival=20.0, prompt_len=8, true_len=20,
+                        predicted_len=20.0, reserve_len=30.0)
+        eng = SimEngine(policy=pol, spec=spec)
+        st_row = eng.run([long, short])
+        assert st_row.preemptions == 1
+        return st_row, {r.rid: r for r in eng.done}
+
+    def test_keep_resume_finishes_strictly_earlier(self):
+        """The double-pay bugfix: a keep-mode resume skips the prefill
+        recompute for its kept progress, so the preempted request finishes
+        strictly earlier than the recompute-mode resume on the same seed —
+        by at least the recompute charge it avoided."""
+        rec_st, rec = self._one_preemption("recompute")
+        keep_st, keep = self._one_preemption("keep")
+        assert rec_st.recompute_ticks > 0
+        assert keep_st.recompute_ticks == 0
+        assert keep[0].t_finish < rec[0].t_finish
+        assert rec[0].t_finish - keep[0].t_finish >= rec_st.recompute_ticks
+        # the non-preempted request is untouched by the mode
+        assert keep[1].t_finish == rec[1].t_finish
+
+    def test_keep_resume_reserves_only_delta(self):
+        """While the victim waits, its filled pages stay reserved (the
+        memory cost keep mode pays) and router signals charge only the
+        delta — no double count."""
+        pol = _pol("keep")
+        spec = ReplicaSpec(1, 2048, prefill_tokens_per_step=8, page_size=4)
+        long = Request(rid=0, arrival=0.0, prompt_len=64, true_len=200,
+                       predicted_len=200.0, reserve_len=220.0)
+        short = Request(rid=1, arrival=20.0, prompt_len=8, true_len=50,
+                        predicted_len=20.0, reserve_len=60.0)
+        eng = SimEngine(policy=pol, spec=spec)
+        eng.submit([long.fresh_copy(), short.fresh_copy()])
+        saw_holder = False
+        guard = 0
+        while not eng.idle and guard < 10_000:
+            eng.step()
+            guard += 1
+            queued = [e[2] for e in eng._ready]
+            for r in queued:
+                if r.held > 0:
+                    saw_holder = True
+                    # held pages are page-rounded over prompt + progress
+                    assert r.held >= r.prompt_len + r.generated
+                    assert r.held % spec.page_size == 0
+                    assert eng.kv.reserved[r.rid] == r.held
+                    # outstanding_kv counts held once (in reserved_now)
+                    assert eng._ready_need == sum(
+                        max(0, int(q.prompt_len + q.reserve_len) - q.held)
+                        for q in queued)
+        assert saw_holder
+        assert len(eng.done) == 2
+
+    def test_expire_releases_held_pages_only_on_timeout(self):
+        """A preempted holder that times out while waiting releases its kept
+        pages at expiry — not before — and counts as timed_out."""
+        pol = _pol("keep")
+        spec = ReplicaSpec(1, 1024, prefill_tokens_per_step=8, page_size=4)
+        long = Request(rid=0, arrival=0.0, prompt_len=64, true_len=400,
+                       predicted_len=400.0, reserve_len=420.0, deadline=60.0)
+        short = Request(rid=1, arrival=20.0, prompt_len=8, true_len=100,
+                        predicted_len=20.0, reserve_len=120.0)
+        eng = SimEngine(policy=pol, spec=spec)
+        st_row = eng.run([long, short])
+        assert st_row.preemptions == 1
+        assert st_row.timed_out == 1
+        assert st_row.completed == 1
+        assert eng.kv.reserved_now == 0 and eng._held_tokens == 0
+
+    def test_stall_breaker_releases_held_not_deadlock(self):
+        """When queued holders pin the pool and nothing is active, the
+        engine must free their pages (recompute for them) instead of
+        wedging the queue until max_steps."""
+        pol = Policy("srtf_pred", "quantile", max_seq_len=4096, preempt=True,
+                     preempt_mode="keep")
+        spec = ReplicaSpec(1, 512, page_size=4)
+        # big holder preempted by a short one; then a head whose need only
+        # fits if the holder's pages are released
+        a = Request(rid=0, arrival=0.0, prompt_len=128, true_len=300,
+                    predicted_len=300.0, reserve_len=320.0)
+        b = Request(rid=1, arrival=10.0, prompt_len=8, true_len=20,
+                    predicted_len=20.0, reserve_len=30.0)
+        c = Request(rid=2, arrival=12.0, prompt_len=64, true_len=80,
+                    predicted_len=60.0, reserve_len=340.0)
+        eng = SimEngine(policy=pol, spec=spec)
+        st_row = eng.run([a, b, c], max_steps=100_000)
+        assert st_row.preemptions == 1
+        assert st_row.held_releases == 1   # a's pages freed so c could start
+        assert st_row.completed == 3
+        assert st_row.makespan < 10_000
+
+    def test_grow_into_page_slack_never_emits_past_reservation(self):
+        """Regression: with large pages, a request can fill its rounding
+        slack so that a grow succeeds while granting few (page-rounded)
+        tokens; the decode loop must re-clamp its emit so usage never
+        exceeds the granted pages."""
+        pol = Policy("fcfs", "quantile", max_seq_len=4096)
+        for page_size, speed in ((64, 1), (4, 8)):
+            spec = ReplicaSpec(2, 1024, speed=speed, page_size=page_size)
+            r = Request(rid=0, arrival=0.0, prompt_len=8, true_len=150,
+                        predicted_len=40.0, reserve_len=32.0)
+            eng = SimEngine(policy=pol, spec=spec, vectorized=False)
+            eng.submit([r.fresh_copy()])
+            guard = 0
+            while not eng.idle and guard < 5000:
+                eng.step()
+                guard += 1
+                for i in range(eng._n_active):
+                    assert eng._a_used[i] <= eng._a_res[i], (page_size, speed)
+            assert len(eng.done) == 1
+            assert 0.0 <= eng.kv.waste_ratio <= 1.0
+
+    def test_preempt_mode_validation(self):
+        with pytest.raises(ValueError):
+            Policy("srtf_pred", "quantile", preempt=True, preempt_mode="oops")
+        with pytest.raises(ValueError):
+            ReplicaSpec(2, 100, page_size=0)
+        with pytest.raises(ValueError):
+            ReplicaSpec(2, 100, page_size=16)     # budget not page-aligned
+
+
+class TestRequestConservation:
+    """Satellite invariant: every submitted request ends in exactly one of
+    done / timed_out / rejected / dropped — across preemption modes,
+    stealing with in-transit expiry, admission control, and undersized
+    replicas."""
+
+    def _conserved(self, cl, reqs, st_row):
+        done = [r for e in cl.engines for r in e.done]
+        timed = [r for e in cl.engines for r in e.timed_out_requests]
+        assert st_row["completed"] == len(done)
+        assert st_row["timed_out"] == len(timed)
+        assert st_row["completed"] + st_row["timed_out"] \
+            + st_row["rejected"] + st_row["dropped"] == len(reqs)
+        rids = sorted([r.rid for r in done] + [r.rid for r in timed]
+                      + [r.rid for r in cl.rejected_requests])
+        # dropped requests are counted but not retained; everything retained
+        # is unique
+        assert len(rids) == len(set(rids))
+        for e in cl.engines:
+            assert e.kv.reserved_now == 0
+            assert e._held_tokens == 0
+
+    @pytest.mark.parametrize("mode", ["recompute", "keep"])
+    def test_overloaded_cluster_with_steal_and_admission(self, mode):
+        reqs = _trace(n=500, rate=2.5, seed=4, slo_factor=2.0, slo_floor=30.0)
+        specs = (ReplicaSpec(4, 2 * (256 + 512), speed=2, page_size=4,
+                             prefill_tokens_per_step=64),
+                 ReplicaSpec(2, 768, speed=1, page_size=4,
+                             prefill_tokens_per_step=32))
+        cl = Cluster(specs, _pol(mode), router="psq",
+                     predictor=LatentOracle(), rebalance_every=20,
+                     steal="quantile", steal_cost=1,
+                     admission=AdmissionController(slack=0.5))
+        st_row = cl.run(reqs).row()
+        assert st_row["timed_out"] > 0 and st_row["rejected"] > 0
+        self._conserved(cl, reqs, st_row)
+
+    def test_in_transit_stolen_requests_expire_without_leaking(self):
+        """Stolen requests delayed past their deadline (steal_cost) must
+        surface from the future heap and expire as timed_out, not vanish."""
+        reqs = _trace(n=400, rate=2.5, seed=8, slo_factor=2.0, slo_floor=30.0)
+        specs = (ReplicaSpec(2, 256 + 512, speed=1),
+                 ReplicaSpec(8, 4 * (256 + 512), speed=3))
+        cl = Cluster(specs, Policy("fcfs", "quantile", quantile=0.9,
+                                   max_seq_len=512),
+                     router="round_robin", predictor=LatentOracle(),
+                     rebalance_every=20, steal_cost=3)
+        st_row = cl.run(reqs).row()
+        assert st_row["stolen"] > 0 and st_row["timed_out"] > 0
+        self._conserved(cl, reqs, st_row)
+
+    def test_dropped_surfaces_in_cluster_row(self):
+        """round_robin lands oversized requests on an undersized replica:
+        they must appear in ClusterStats.row()['dropped'] and balance the
+        conservation equation."""
+        specs = (ReplicaSpec(4, 2 * (256 + 512)), ReplicaSpec(2, 500))
+        reqs = _trace(n=250, rate=1.5, seed=11)
+        cl = Cluster(specs, Policy("fcfs", "quantile", quantile=0.9,
+                                   max_seq_len=512),
+                     router="round_robin", predictor=LatentOracle())
+        st_row = cl.run(reqs).row()
+        assert st_row["dropped"] > 0
+        self._conserved(cl, reqs, st_row)
+
+
+class TestKeepPaysOff:
+    def test_keep_cuts_recompute_ticks_and_latency(self):
+        """Acceptance shape of the bench: at equal KV budget, in a feasible
+        (non-overloaded) regime, keep-pages preemption re-pays strictly
+        fewer prefill ticks than recompute, loses no completions, and the
+        saved slot-time shows up as lower latency."""
+        reqs = _trace(n=600, rate=0.5, seed=3)
+        kv = 8 * (256 + 512) // 16 * 16
+        rows = {}
+        for mode in ("recompute", "keep"):
+            pol = Policy("srtf_pred", "quantile", quantile=0.9,
+                         max_seq_len=512, preempt=True, preempt_factor=1.2,
+                         preempt_mode=mode)
+            spec = ReplicaSpec(8, kv, speed=1, prefill_tokens_per_step=8,
+                               page_size=16)
+            eng = SimEngine(policy=pol, predictor=LatentOracle(), spec=spec)
+            rows[mode] = eng.run(reqs, max_steps=1_000_000).row()
+        rec, keep = rows["recompute"], rows["keep"]
+        assert rec["preemptions"] > 10
+        assert rec["recompute_ticks"] > 0
+        assert keep["recompute_ticks"] < rec["recompute_ticks"]
+        assert keep["completed"] == rec["completed"] == 600
+        assert keep["mean_latency"] < rec["mean_latency"]
+        assert keep["p99_latency"] <= rec["p99_latency"]
