@@ -21,8 +21,17 @@ Tracks:
   on a stationary vs a drifting trace, with SLO-aware admission. Shows the
   static head's reservation coverage collapsing under drift while the
   adapted stack holds the target.
+* ``run_cluster_prefix`` — shared-context traffic (system prompts +
+  multi-turn chat sessions + agentic loops) replayed with ref-counted
+  prefix sharing off/on × {jsq, prefix_affine} routing. Reports KV
+  amplification (logical tokens served per physical token reserved) and
+  prefill ticks erased by prefix cache hits.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--cluster-only]
+
+``--stamp BENCH_serving.json`` writes every table's rows + validation
+checks (plus run metadata) to a JSON file, starting the perf trajectory
+the ROADMAP asks for.
 """
 
 from __future__ import annotations
@@ -536,6 +545,115 @@ def validate_cluster_preemption(rows) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# prefix sharing: session traffic x {sharing off/on} x {jsq, prefix_affine}
+# ---------------------------------------------------------------------------
+
+PREFIX_MATRIX = (
+    # (router, share_prefixes) — the share=False row is the PR-5 pool (every
+    # request pays for its full context privately); the share=True rows add
+    # ref-counted prefix pages, and the router axis isolates what affinity
+    # placement buys on top of the pool mechanism itself
+    ("jsq", False),
+    ("jsq", True),
+    ("prefix_affine", True),
+)
+
+
+def run_cluster_prefix(n_requests=50_000, n_replicas=4, max_slots=16,
+                       load=0.6, seed=0, verbose=True):
+    """Shared-context serving: a single-setting trace where every request
+    carries a 512-token system prompt and ~2/3 of traffic arrives as
+    multi-turn chat sessions / agentic loops whose later turns extend earlier
+    context, replayed with the KV pool's ref-counted prefix sharing off vs on
+    × {jsq, prefix_affine} routing. ``n_requests`` is the *base* request
+    count — session turns append on top (~2.1x total). Reports the KV
+    amplification (logical tokens served per physical token reserved),
+    prefill ticks actually paid vs erased by prefix hits, and the usual
+    latency columns."""
+    base = dict(n_requests=n_requests, model="qwen", scenario="math",
+                seed=seed, session_frac=0.30, agentic_frac=0.35,
+                system_prompt_len=512, session_gap_mean=60.0,
+                agentic_gap_mean=2.0, session_turns_mean=3.0,
+                agentic_turns_mean=6.0, prompt_min=16, prompt_max=48,
+                max_seq_len=1280)
+    if n_requests <= 0:
+        print("empty trace (n_requests=0): nothing to replay")
+        return []
+    probe = make_trace(TraceConfig(rate=1.0, **base))
+    specs = tuple(ReplicaSpec(max_slots=max_slots, kv_budget=32_768,
+                              page_size=16, prefill_tokens_per_step=64)
+                  for _ in range(n_replicas))
+    rate = stable_rate_specs(specs, mean_true_length(probe), load)
+    cfg = TraceConfig(rate=rate, **base)
+    t0 = time.time()
+    reqs = make_trace(cfg)
+    n_sess = sum(1 for r in reqs if r.prefix_id
+                 and not r.prefix_id.startswith("sys/"))
+    if verbose:
+        print(f"prefix trace: {len(reqs)} requests ({n_requests} base + "
+              f"{len(reqs) - n_requests} session turns, {n_sess} carrying "
+              f"session context, rate {rate:.3f}/step, 512-token system "
+              f"prompt) built in {time.time() - t0:.1f}s")
+        print(f"  {'router':14s} {'share':>5s} {'p50':>8s} {'p99':>9s} "
+              f"{'amp':>6s} {'prefill':>8s} {'saved':>8s} {'hits':>7s} "
+              f"{'cow':>5s} {'secs':>6s}")
+    pol = Policy("fcfs", "quantile", quantile=0.9, max_seq_len=1280)
+    oracle = make_oracle(cfg)
+    rows = []
+    for router, share in PREFIX_MATRIX:
+        sspecs = tuple(ReplicaSpec(
+            max_slots=s.max_slots, kv_budget=s.kv_budget,
+            page_size=s.page_size,
+            prefill_tokens_per_step=s.prefill_tokens_per_step,
+            share_prefixes=share) for s in specs)
+        t0 = time.time()
+        st = Cluster(sspecs, pol, router=router, predictor=oracle).run(reqs)
+        dt = time.time() - t0
+        row = st.row()
+        row.update(share=share, seconds=dt)
+        rows.append(row)
+        if verbose:
+            print(f"  {st.router:14s} {int(share):5d} {st.p50_latency:8.1f} "
+                  f"{st.p99_latency:9.1f} {st.kv_amplification:6.3f} "
+                  f"{st.prefill_ticks:8d} {st.prefill_saved_ticks:8d} "
+                  f"{st.prefix_hits:7d} {st.cow_copies:5d} {dt:6.1f}")
+    return rows
+
+
+def validate_cluster_prefix(rows) -> dict:
+    if not rows:
+        return {"empty_trace": True}
+    by = {(r["router"], r["share"]): r for r in rows}
+    off = by[("jsq", False)]
+    jsq = by[("jsq", True)]
+    aff = by[("prefix_affine", True)]
+    return {
+        "all_completed": all(r["completed"] == rows[0]["completed"]
+                             for r in rows),
+        # sharing off must be inert: the pool reports no amplification
+        "off_is_inert": off["kv_amplification"] == 1.0
+        and off["prefill_saved_ticks"] == 0,
+        # acceptance: >1.2x KV-capacity amplification under session traffic
+        "amplification_x": aff["kv_amplification"],
+        "amplification_over_1_2": aff["kv_amplification"] > 1.2,
+        # ... with a measurable prefill reduction (>=10% of the ticks the
+        # sharing-off pool pays)
+        "prefill_saved_pct": 100 * aff["prefill_saved_ticks"]
+        / max(off["prefill_ticks"], 1),
+        "prefill_reduced": aff["prefill_saved_ticks"]
+        >= 0.10 * off["prefill_ticks"],
+        # ... and affinity placement beats jsq on both axes
+        "affine_beats_jsq_amp": aff["kv_amplification"]
+        > jsq["kv_amplification"],
+        "affine_beats_jsq_saved": aff["prefill_saved_ticks"]
+        > jsq["prefill_saved_ticks"],
+        "affine_p99_not_worse": aff["p99_latency"]
+        <= jsq["p99_latency"] * 1.05,
+        "replay_under_90s": all(r["seconds"] < 90.0 for r in rows),
+    }
+
+
+# ---------------------------------------------------------------------------
 # online adaptation: static vs conformal vs conformal+refresh, under drift
 # ---------------------------------------------------------------------------
 
@@ -657,10 +775,62 @@ def validate_cluster_adaptation(rows, target=0.9) -> dict:
     }
 
 
+def _write_stamp(path, tables, **meta):
+    """Stamp bench rows + validation checks to ``path`` (JSON). The file is
+    the start of the serving perf trajectory: each entry is one table's raw
+    rows and its ``validate_*`` booleans/metrics, keyed by table name, plus
+    the run metadata needed to reproduce it."""
+    import json
+
+    def scrub(x):
+        if isinstance(x, dict):
+            return {k: scrub(v) for k, v in x.items()}
+        if isinstance(x, (list, tuple)):
+            return [scrub(v) for v in x]
+        if isinstance(x, (np.integer,)):
+            return int(x)
+        if isinstance(x, (np.floating,)):
+            return float(x)
+        if isinstance(x, (np.bool_,)):
+            return bool(x)
+        return x
+
+    with open(path, "w") as f:
+        json.dump(scrub({"meta": meta, "tables": tables}), f, indent=1,
+                  sort_keys=True)
+    print(f"stamped {len(tables)} table(s) -> {path}")
+
+
 def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
-         preemption_only=False, n_requests=50_000, n_replicas=4, max_slots=32,
-         pattern="bursty", seed=0, hetero=True, predictors=True,
-         adaptation=True, preemption=True):
+         preemption_only=False, prefix_only=False, n_requests=50_000,
+         n_replicas=4, max_slots=32, pattern="bursty", seed=0, hetero=True,
+         predictors=True, adaptation=True, preemption=True, prefix=True,
+         stamp=None):
+    tables = {}
+
+    def finish(name, rows, checks):
+        tables[name] = {"rows": rows, "checks": checks}
+        if stamp:
+            _write_stamp(stamp, tables, n_requests=n_requests,
+                         n_replicas=n_replicas, max_slots=max_slots,
+                         pattern=pattern, seed=seed)
+
+    if prefix_only:
+        prows = run_cluster_prefix(n_requests=n_requests,
+                                   n_replicas=n_replicas, seed=seed)
+        checks = validate_cluster_prefix(prows)
+        print("prefix checks:", checks)
+        finish("cluster_prefix", prows, checks)
+        # CI smoke mode is a regression gate: hard-fail on the acceptance
+        # booleans so a prefix-sharing/affinity regression turns the
+        # nightly job red
+        hard = ("all_completed", "off_is_inert", "amplification_over_1_2",
+                "prefill_reduced", "affine_beats_jsq_amp",
+                "affine_beats_jsq_saved", "affine_p99_not_worse")
+        bad = [k for k in hard if not checks.get(k, False)]
+        if bad:
+            raise SystemExit(f"prefix acceptance failed: {bad}")
+        return prows
     if preemption_only:
         prows = run_cluster_preemption(n_requests=n_requests,
                                        n_replicas=n_replicas,
@@ -668,6 +838,7 @@ def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
                                        seed=seed)
         checks = validate_cluster_preemption(prows)
         print("preemption checks:", checks)
+        finish("cluster_preemption", prows, checks)
         # CI smoke mode is a regression gate: hard-fail on the acceptance
         # booleans so a keep-pages regression turns the nightly job red
         hard = ("preemptions_exercised", "keep_cuts_recompute_ticks",
@@ -685,6 +856,7 @@ def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
                                        seed=seed)
         checks = validate_cluster_adaptation(arows)
         print("adaptation checks:", checks)
+        finish("cluster_adaptation", arows, checks)
         # CI smoke mode is a regression gate: hard-fail on the acceptance
         # booleans so nightly drift/coverage breakage turns the job red
         hard = ("static_drift_degrades", "adapted_holds_target",
@@ -696,33 +868,51 @@ def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
     rows = None
     if not cluster_only:
         rows = run(fast=fast)
-        print("checks:", validate(rows))
+        checks = validate(rows)
+        print("checks:", checks)
+        finish("single_replica", rows, checks)
     if cluster or cluster_only:
         crows = run_cluster(n_requests=n_requests, n_replicas=n_replicas,
                             max_slots=max_slots, pattern=pattern, seed=seed)
-        print("cluster checks:", validate_cluster(crows))
+        checks = validate_cluster(crows)
+        print("cluster checks:", checks)
+        finish("cluster", crows, checks)
     if hetero and (cluster or cluster_only):
         hrows = run_cluster_hetero(n_requests=n_requests, max_slots=max_slots,
                                    pattern=pattern, seed=seed)
-        print("hetero checks:", validate_cluster_hetero(hrows))
+        checks = validate_cluster_hetero(hrows)
+        print("hetero checks:", checks)
+        finish("cluster_hetero", hrows, checks)
     if predictors and (cluster or cluster_only):
         prows = run_cluster_predictors(n_requests=n_requests,
                                        n_replicas=n_replicas,
                                        max_slots=max_slots, pattern=pattern,
                                        seed=seed)
-        print("predictor checks:", validate_cluster_predictors(prows))
+        checks = validate_cluster_predictors(prows)
+        print("predictor checks:", checks)
+        finish("cluster_predictors", prows, checks)
     if preemption and (cluster or cluster_only):
         prows = run_cluster_preemption(n_requests=n_requests,
                                        n_replicas=n_replicas,
                                        max_slots=max_slots, pattern=pattern,
                                        seed=seed)
-        print("preemption checks:", validate_cluster_preemption(prows))
+        checks = validate_cluster_preemption(prows)
+        print("preemption checks:", checks)
+        finish("cluster_preemption", prows, checks)
     if adaptation and (cluster or cluster_only):
         arows = run_cluster_adaptation(n_requests=n_requests,
                                        n_replicas=n_replicas,
                                        max_slots=max_slots, pattern=pattern,
                                        seed=seed)
-        print("adaptation checks:", validate_cluster_adaptation(arows))
+        checks = validate_cluster_adaptation(arows)
+        print("adaptation checks:", checks)
+        finish("cluster_adaptation", arows, checks)
+    if prefix and (cluster or cluster_only):
+        frows = run_cluster_prefix(n_requests=n_requests,
+                                   n_replicas=n_replicas, seed=seed)
+        checks = validate_cluster_prefix(frows)
+        print("prefix checks:", checks)
+        finish("cluster_prefix", frows, checks)
     return rows
 
 
@@ -736,6 +926,12 @@ if __name__ == "__main__":
     ap.add_argument("--preemption-only", action="store_true",
                     help="run only the recompute-vs-keep preemption table "
                          "(CI smoke)")
+    ap.add_argument("--prefix-only", action="store_true",
+                    help="run only the prefix-sharing/affinity table "
+                         "(CI smoke)")
+    ap.add_argument("--stamp", metavar="PATH", default=None,
+                    help="write rows + validation checks of every table run "
+                         "to PATH as JSON (e.g. BENCH_serving.json)")
     ap.add_argument("--no-hetero", action="store_true",
                     help="skip the heterogeneous x SLO x stealing table")
     ap.add_argument("--no-predictors", action="store_true",
@@ -744,6 +940,8 @@ if __name__ == "__main__":
                     help="skip the online-adaptation (drift/conformal) table")
     ap.add_argument("--no-preemption", action="store_true",
                     help="skip the recompute-vs-keep preemption table")
+    ap.add_argument("--no-prefix", action="store_true",
+                    help="skip the prefix-sharing/affinity table")
     ap.add_argument("--n-requests", type=int, default=50_000)
     ap.add_argument("--n-replicas", type=int, default=4)
     ap.add_argument("--max-slots", type=int, default=32)
@@ -752,9 +950,10 @@ if __name__ == "__main__":
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     main(cluster_only=args.cluster_only, adaptation_only=args.adaptation_only,
-         preemption_only=args.preemption_only,
+         preemption_only=args.preemption_only, prefix_only=args.prefix_only,
          n_requests=args.n_requests, n_replicas=args.n_replicas,
          max_slots=args.max_slots, pattern=args.pattern, seed=args.seed,
          hetero=not args.no_hetero, predictors=not args.no_predictors,
          adaptation=not args.no_adaptation,
-         preemption=not args.no_preemption)
+         preemption=not args.no_preemption, prefix=not args.no_prefix,
+         stamp=args.stamp)

@@ -23,7 +23,10 @@ Pipeline (all real, no stubs):
   8. page the KV cache: replay an SRTF-preemptive, prefill-expensive engine
      under preempt_mode="recompute" (a preempted victim re-reserves and
      re-prefills from scratch) vs "keep" (it holds its filled pages and
-     resumes with only the delta), showing the recompute ticks saved.
+     resumes with only the delta), showing the recompute ticks saved;
+  9. share the system prompt: replay the workload with every request
+     carrying the same 24-token prefix, private copies vs ref-counted
+     shared pages (kv_amplification, prefill ticks skipped on cache hits).
 
     PYTHONPATH=src python examples/serve_with_prod.py [--train-steps 300]
 """
@@ -70,12 +73,12 @@ def main():
     tcfg = TrainConfig(lr=3e-3, warmup_steps=10, decay_steps=args.train_steps,
                        seed=args.seed)
     ds = make_lm_dataset(2048, 96, seed=args.seed)
-    print(f"[1/8] training tiny-lm for {args.train_steps} steps ...")
+    print(f"[1/9] training tiny-lm for {args.train_steps} steps ...")
     state = train_loop(model, tcfg, batch_iterator(ds, 16, seed=args.seed),
                        args.train_steps, rt=Runtime.local(), log_every=100)
 
     # -- 2. repeated-sampling data collection --------------------------------
-    print(f"[2/8] collecting {args.r} generations x {args.n_prompts} prompts ...")
+    print(f"[2/9] collecting {args.r} generations x {args.n_prompts} prompts ...")
     eng = RealEngine(model, state.params, max_new=args.max_new, temperature=0.8)
     rng = np.random.default_rng(args.seed)
     tok = ToyTokenizer()
@@ -91,7 +94,7 @@ def main():
           f"noise radius={nr:.2f}  ({time.time()-t0:.0f}s)")
 
     # -- 3. train the ProD-D head on REAL hidden states ----------------------
-    print("[3/8] training ProD-D head on the served model's hidden states ...")
+    print("[3/9] training ProD-D head on the served model's hidden states ...")
     pcfg = PredictorConfig(n_bins=24, bin_max=float(lens.max() + 8), epochs=40,
                            batch_size=32)
     edges = B.make_edges(pcfg.n_bins, pcfg.bin_max)
@@ -104,7 +107,7 @@ def main():
           f"(noise radius {nr:.2f})")
 
     # -- 4. serve a fresh workload with ProD scheduling ----------------------
-    print(f"[4/8] serving {args.n_serve} batched requests ...")
+    print(f"[4/9] serving {args.n_serve} batched requests ...")
     arrivals = np.cumsum(rng.exponential(1.5, args.n_serve))
     fresh = rng.integers(0, args.n_prompts, args.n_serve)
     reqs = []
@@ -124,7 +127,7 @@ def main():
     # -- 5. heterogeneous cluster replay with the trained ProD head ----------
     # a fast large replica next to a slow small one, per-request SLOs, and
     # periodic ProD-aware work stealing: the full prediction-aware stack
-    print("[5/8] replaying across a heterogeneous 2-replica cluster "
+    print("[5/9] replaying across a heterogeneous 2-replica cluster "
           "(speed 2x+1x, SLOs, work stealing) ...")
     specs = (ReplicaSpec(4, 2 * (6 + args.max_new), speed=2,
                          prefill_tokens_per_step=8),
@@ -152,7 +155,7 @@ def main():
     # -- 6. predictor service in the dispatch loop ---------------------------
     # the SAME trained head, now served through the batched jitted
     # PredictorService, driving deadline-aware queue orderings
-    print("[6/8] predictor-in-the-loop: batched dispatch-time inference + "
+    print("[6/9] predictor-in-the-loop: batched dispatch-time inference + "
           "deadline-aware ordering ...")
     for order in ("fcfs", "edf", "laxity"):
         svc = PredictorService(pred, window=8.0)
@@ -176,7 +179,7 @@ def main():
     # longer workload (3x the serve set, switch after the first third) gives
     # the feedback loop room to act; coverage is scored on the settled last
     # third.
-    print("[7/8] online adaptation: mid-stream 1.5x output drift, static vs "
+    print("[7/9] online adaptation: mid-stream 1.5x output drift, static vs "
           "adaptive-conformal + refresh ...")
     n_ad = 3 * args.n_serve
     arr2 = np.cumsum(rng.exponential(1.5, n_ad))
@@ -215,7 +218,7 @@ def main():
     # "recompute", every preempted victim re-pays ceil((prompt+progress)/4)
     # prefill ticks on resume; under "keep" it holds the pages it filled
     # (shown by held_peak) and resumes with only the delta reservation
-    print("[8/8] paged KV: recompute vs keep-pages preemption "
+    print("[8/9] paged KV: recompute vs keep-pages preemption "
           "(page_size=4, prefill 4 tok/tick) ...")
     for mode in ("recompute", "keep"):
         pol = Policy("srtf_pred", "quantile", quantile=0.9,
@@ -229,11 +232,34 @@ def main():
               f"recompute_ticks={st.recompute_ticks} "
               f"held_peak={st.held_peak} occ={st.occupancy:.3f} "
               f"frag={st.frag_ratio:.4f}")
+    # -- 9. shared-prefix KV pages -------------------------------------------
+    # every request now carries a 24-token system prompt as a shared prefix:
+    # with share_prefixes=True one physical copy backs all concurrent
+    # requests (ref-counted; kv_amplification > 1) and later admits skip
+    # re-prefilling the covered tokens (prefill_saved_ticks)
+    print("[9/9] shared system prompt: private copies vs ref-counted "
+          "prefix pages ...")
+    import dataclasses
+    sys_len = 24
+    shared_reqs = [dataclasses.replace(r, prompt_len=r.prompt_len + sys_len,
+                                       prefix_id="sys/toy",
+                                       prefix_len=sys_len) for r in reqs]
+    pol = Policy("fcfs", "quantile", quantile=0.9, max_seq_len=args.max_new)
+    for share in (False, True):
+        spec = ReplicaSpec(4, 4 * (32 + args.max_new), speed=2,
+                           prefill_tokens_per_step=4, page_size=4,
+                           share_prefixes=share)
+        st = SimEngine(policy=pol, predictor=pred, spec=spec).run(shared_reqs)
+        print(f"      share_prefixes={str(share):5s} "
+              f"p50={st.p50_latency:7.1f} p99={st.p99_latency:7.1f} "
+              f"amp={st.kv_amplification:.3f} prefill={st.prefill_ticks} "
+              f"saved={st.prefill_saved_ticks} hits={st.prefix_hits}")
     print("done — ProD scheduling/routing/stealing vs prediction-blind "
           "baselines shown above; stage 6 serves the trained head itself "
           "at dispatch time, stage 7 keeps it calibrated while the workload "
           "drifts, stage 8 keeps preempted requests' KV pages so resume "
-          "skips the prefill recompute.")
+          "skips the prefill recompute, stage 9 shares one physical copy "
+          "of the system prompt across every concurrent request.")
 
 
 if __name__ == "__main__":

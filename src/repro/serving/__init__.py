@@ -1,6 +1,8 @@
-"""Serving substrate: requests, KV-cache reservation accounting, schedulers,
+"""Serving substrate: requests, KV-cache reservation accounting (paged, with
+ref-counted shared prefix pages + copy-on-write), schedulers,
 continuous-batching engines (discrete-event simulator + real tiny-LM), the
-open-loop multi-replica cluster simulator (arrival traces + routers), the
+open-loop multi-replica cluster simulator (arrival traces — including
+shared-context session/agentic traffic — + routers), the
 dispatch-time predictor service that puts the trained ProD-D head in the
 loop, and the online adaptation subsystem (drift-aware traces, adaptive
 conformal calibration, predictor refresh, SLO-aware admission) that closes

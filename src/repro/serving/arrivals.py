@@ -9,7 +9,19 @@ them — under three arrival processes:
 * ``bursty``   — 2-state Markov-modulated Poisson (calm/burst), normalized so
   the long-run mean rate equals ``rate``;
 * ``diurnal``  — sinusoidally modulated rate via thinning,
-  λ(t) = rate·(1 + amp·sin(2πt/period)).
+  λ(t) = rate·(1 + amp·sin(2πt/period)); for ``amp > 1`` the sinusoid is
+  clamped at 0 (dead-of-night silence) and rescaled so the long-run mean
+  rate still equals ``rate``.
+
+Traces can carry **shared context**: ``session_frac``/``agentic_frac`` turn
+a fraction of base requests into multi-turn chat sessions / agentic tool
+loops whose follow-up prompts extend the previous turn's full context, and
+``system_prompt_len`` prepends a per-scenario common system prompt. Every
+such request is tagged with ``prefix_id``/``prefix_len`` so a
+``share_prefixes=True`` KV pool can back the common tokens with ref-counted
+shared pages and the ``prefix_affine`` router can keep sessions where their
+pages live. All knobs default off — the trace is then bit-identical to the
+session-free generator.
 
 Each request carries φ = its (noise-corrupted) length-law latents, so the
 :class:`LatentOracle` can stand in for a trained ProD head at trace scale:
@@ -92,7 +104,8 @@ class TraceConfig:
         a single setting or ``"mix"`` over all of them.
     seed : one seed drives arrivals, latents, lengths, and feature noise —
         traces are fully deterministic.
-    prompt_min, prompt_max : uniform prompt-length range (KV admission cost).
+    prompt_min, prompt_max : uniform prompt-length range, both ends
+        *inclusive* (KV admission cost).
     max_seq_len : serve cap; decode lengths are clipped to it.
     view : predictor probe view (``last``/``mean``/``proxy``/``entropy``) —
         sets the feature-noise level requests carry (see
@@ -102,7 +115,27 @@ class TraceConfig:
     drift : optional :class:`DriftSpec` making the workload non-stationary
         (scenario-mix shift and/or true-length scale inflation at a switch
         step). ``None`` keeps the stationary trace bit-identical to before.
-    burst_* : bursty-pattern shape; diurnal_* : diurnal-pattern shape.
+    burst_* : bursty-pattern shape; diurnal_* : diurnal-pattern shape
+        (``diurnal_amp`` must be >= 0; above 1 the modulated rate is clamped
+        at 0 and renormalized to preserve the mean — see module docstring).
+    session_frac : fraction of base requests that seed a multi-turn chat
+        session; follow-up turns (1 + Geometric(mean ``session_turns_mean``)
+        of them) re-submit the full previous context (prompt + answer) plus
+        fresh user tokens, arriving ``exp(session_gap_mean)`` steps after
+        the previous answer could have finished. Each turn carries
+        ``prefix_id="chat/<seed rid>"`` with ``prefix_len`` = the inherited
+        context. Session turns are *appended* to the trace: it then holds
+        more than ``n_requests`` requests.
+    agentic_frac : like ``session_frac`` but for agentic tool loops: short
+        think-time gaps (``agentic_gap_mean``), small tool-output glue
+        between turns, ``agentic_turns_mean`` extra calls on average
+        (``prefix_id="agent/<seed rid>"``). A base request seeds at most one
+        of the two (``session_frac + agentic_frac <= 1``).
+    session_turns_mean, session_gap_mean, agentic_turns_mean,
+    agentic_gap_mean : shape knobs for the above.
+    system_prompt_len : tokens of a per-scenario common system prompt
+        prepended to every base request's prompt
+        (``prefix_id="sys/<setting>"``) — the classic always-shared prefix.
     """
 
     n_requests: int = 50_000
@@ -129,6 +162,39 @@ class TraceConfig:
     # diurnal
     diurnal_period: float = 20_000.0
     diurnal_amp: float = 0.8
+    # shared-context workloads (all 0 = off: trace bit-identical to before)
+    session_frac: float = 0.0
+    session_turns_mean: float = 3.0
+    session_gap_mean: float = 200.0
+    agentic_frac: float = 0.0
+    agentic_turns_mean: float = 6.0
+    agentic_gap_mean: float = 8.0
+    system_prompt_len: int = 0
+
+    def __post_init__(self):
+        if self.diurnal_amp < 0:
+            raise ValueError(
+                f"diurnal_amp must be >= 0, got {self.diurnal_amp} (negative "
+                "amplitudes are a phase shift in disguise; use amp >= 0)")
+        if not 0.0 <= self.session_frac <= 1.0:
+            raise ValueError("session_frac must be in [0, 1]")
+        if not 0.0 <= self.agentic_frac <= 1.0:
+            raise ValueError("agentic_frac must be in [0, 1]")
+        if self.session_frac + self.agentic_frac > 1.0:
+            raise ValueError("session_frac + agentic_frac must be <= 1")
+        if self.system_prompt_len < 0:
+            raise ValueError("system_prompt_len must be >= 0")
+        if min(self.session_turns_mean, self.session_gap_mean,
+               self.agentic_turns_mean, self.agentic_gap_mean) < 0:
+            raise ValueError("session/agentic turn and gap means must be >= 0")
+        if not 0 <= self.prompt_min <= self.prompt_max:
+            raise ValueError("need 0 <= prompt_min <= prompt_max")
+
+    @property
+    def has_sessions(self) -> bool:
+        """Does this trace carry any shared-context traffic?"""
+        return (self.session_frac > 0 or self.agentic_frac > 0
+                or self.system_prompt_len > 0)
 
     def settings(self) -> Tuple[Tuple[str, str], ...]:
         if self.model == "mix" and self.scenario == "mix":
@@ -173,15 +239,31 @@ def _bursty_arrivals(cfg: TraceConfig, rng: np.random.Generator,
 
 def _diurnal_arrivals(cfg: TraceConfig, rng: np.random.Generator,
                       n: int) -> np.ndarray:
-    """Inhomogeneous Poisson via thinning against λ_max = rate·(1+amp)."""
-    lam_max = cfg.rate * (1.0 + cfg.diurnal_amp)
+    """Inhomogeneous Poisson via thinning against the modulation's peak.
+
+    ``amp <= 1``: λ(t) = rate·(1 + amp·sin(2πt/period)), mean-rate ``rate``
+    by symmetry. ``amp > 1`` would push λ(t) negative through the troughs —
+    the raw sinusoid is not a rate — so λ is clamped at 0 there and divided
+    by the clipped sinusoid's mean, E[max(0, 1 + amp·sin θ)] =
+    (π + 2·arcsin(1/amp) + 2·amp·cos(arcsin(1/amp))) / 2π, keeping the
+    long-run mean rate equal to ``rate`` (the normalization every arrival
+    pattern promises). Without the renormalization the clamp silently
+    *inflates* the mean rate — the pre-fix bug."""
+    amp = cfg.diurnal_amp
+    if amp > 1.0:
+        crit = np.arcsin(1.0 / amp)
+        mean_pos = (np.pi + 2.0 * crit + 2.0 * amp * np.cos(crit)) \
+            / (2.0 * np.pi)
+    else:
+        mean_pos = 1.0          # exact: keeps amp <= 1 traces bit-identical
+    lam_max = cfg.rate * (1.0 + amp) / mean_pos
     kept: List[np.ndarray] = []
     t, total = 0.0, 0
     while total < n:
         chunk = max(1024, 2 * (n - total))
         cand = t + np.cumsum(rng.exponential(1.0 / lam_max, size=chunk))
-        lam_t = cfg.rate * (1.0 + cfg.diurnal_amp
-                            * np.sin(2.0 * np.pi * cand / cfg.diurnal_period))
+        lam_t = cfg.rate / mean_pos * np.maximum(
+            0.0, 1.0 + amp * np.sin(2.0 * np.pi * cand / cfg.diurnal_period))
         keep = cand[rng.random(chunk) < lam_t / lam_max]
         kept.append(keep)
         total += len(keep)
@@ -269,7 +351,9 @@ def make_trace(cfg: TraceConfig) -> List[Request]:
         phi[idx] = corrupt_latents(rng, lat, spec, cfg.view)
         slo_budget[idx] = cfg.slo_floor + cfg.slo_factor * spec.law.median_scale
     true_len = np.minimum(true_len, cfg.max_seq_len)
-    plen = rng.integers(cfg.prompt_min, cfg.prompt_max, size=n)
+    # inclusive on both ends, as the TraceConfig docstring promises (the
+    # pre-fix exclusive upper bound made prompt_max unreachable)
+    plen = rng.integers(cfg.prompt_min, cfg.prompt_max, size=n, endpoint=True)
     with_slo = cfg.slo_factor > 0.0 or cfg.slo_floor > 0.0
 
     reqs = [
@@ -281,8 +365,78 @@ def make_trace(cfg: TraceConfig) -> List[Request]:
         )
         for i in range(n)
     ]
+    if cfg.has_sessions:
+        _attach_sessions(cfg, rng, reqs, pick, settings, slo_budget, with_slo)
     reqs.sort(key=lambda r: r.arrival)
     return reqs
+
+
+def _attach_sessions(cfg: TraceConfig, rng: np.random.Generator,
+                     reqs: List[Request], pick: np.ndarray, settings,
+                     slo_budget: np.ndarray, with_slo: bool):
+    """Turn base requests into shared-context traffic, in place.
+
+    System prompts: every base request gets ``system_prompt_len`` extra
+    prompt tokens tagged ``prefix_id="sys/<setting>"`` — one common prefix
+    per scenario, shared across unrelated requests.
+
+    Sessions/agentic loops: a ``session_frac``/``agentic_frac`` split of the
+    base requests each seeds a turn chain. Turn k+1 resubmits turn k's whole
+    context (prompt + realized answer) plus fresh user/tool tokens, arrives
+    after the previous answer's decode time plus a think-time gap, and
+    declares the inherited context via ``prefix_id``/``prefix_len`` so a
+    sharing KV pool recognizes it. Follow-up turns draw fresh lengths from
+    the seed's scenario law (stationary — drift applies to base arrivals
+    only) and are *appended*: rids continue past ``n_requests``. Chains stop
+    before the context would crowd out decode room under ``max_seq_len``.
+
+    All extra randomness is drawn after the base trace is fully built, so
+    switching sessions on never perturbs the base requests' draws."""
+    n = len(reqs)
+    rid = n
+    if cfg.system_prompt_len > 0:
+        for r in reqs:
+            r.prompt_len += cfg.system_prompt_len
+            r.prefix_id = f"sys/{r.setting}"
+            r.prefix_len = cfg.system_prompt_len
+    u = rng.random(n)
+    extra: List[Request] = []
+    ctx_cap = cfg.max_seq_len - max(64, cfg.prompt_max)
+    for i in range(n):
+        chat = u[i] < cfg.session_frac
+        agentic = (not chat
+                   and u[i] < cfg.session_frac + cfg.agentic_frac)
+        if not (chat or agentic):
+            continue
+        seed = reqs[i]
+        spec = get_spec(*settings[pick[i]])
+        turns_mean = cfg.session_turns_mean if chat else cfg.agentic_turns_mean
+        gap_mean = cfg.session_gap_mean if chat else cfg.agentic_gap_mean
+        turns = int(rng.geometric(min(1.0, 1.0 / max(turns_mean, 1.0))))
+        sid = f"{'chat' if chat else 'agent'}/{seed.rid}"
+        ctx, prev_ans, t_prev = seed.prompt_len, seed.true_len, seed.arrival
+        for _ in range(turns):
+            fresh = int(rng.integers(cfg.prompt_min, cfg.prompt_max,
+                                     endpoint=True)) if chat \
+                else int(rng.integers(8, 32, endpoint=True))
+            new_prompt = ctx + prev_ans + fresh
+            if new_prompt > ctx_cap:
+                break       # context budget exhausted: session ends
+            lat = sample_prompt_latents(rng, spec.law, 1)
+            t_len = min(int(sample_lengths(rng, lat, 1, spec.law)[0, 0]),
+                        cfg.max_seq_len)
+            t_arr = t_prev + float(prev_ans) + float(rng.exponential(gap_mean))
+            extra.append(Request(
+                rid=rid, arrival=t_arr, prompt_len=new_prompt,
+                true_len=t_len,
+                phi=corrupt_latents(rng, lat, spec, cfg.view)[0],
+                setting=seed.setting,
+                deadline=(t_arr + float(slo_budget[i])) if with_slo else None,
+                prefix_id=sid, prefix_len=ctx + prev_ans,
+            ))
+            rid += 1
+            ctx, prev_ans, t_prev = new_prompt, t_len, t_arr
+    reqs.extend(extra)
 
 
 class LatentOracle:

@@ -22,6 +22,14 @@ Router policies:
   (active + queued). This is the router only a length predictor enables;
   with ``reserve="quantile"`` the same ProD-D distribution also sizes each
   request's KV reservation, giving the full prediction-aware serving stack.
+* ``prefix_affine`` — prefix-affinity routing for shared-context traffic:
+  a request carrying a ``prefix_id`` joins the least-loaded replica already
+  holding that prefix's shared KV pages (so it hits the cache instead of
+  re-prefilling and re-reserving the common context), *unless* every holder
+  is overloaded — more than ``prefix_imbalance`` requests-worth of load
+  above the lightest replica — in which case it falls back to jsq. A prefix
+  resident everywhere (a hot system prompt) routes exactly like jsq;
+  prefix-less requests route plain jsq too.
 
 Work stealing: with ``rebalance_every=k`` the cluster pauses every k steps
 and migrates *queued* (never active — their KV lives on the donor) requests
@@ -58,7 +66,7 @@ from repro.serving.engine import (ReplicaSpec, SimEngine, _goodput,
 from repro.serving.request import Request
 from repro.serving.scheduler import Policy, annotate_predictions
 
-ROUTERS = ("round_robin", "jsq", "least_kv", "psq")
+ROUTERS = ("round_robin", "jsq", "least_kv", "psq", "prefix_affine")
 STEAL_MODES = ("tail", "quantile")
 
 
@@ -94,6 +102,13 @@ class ClusterStats:
     frag_ratio: float = 0.0        # page-rounding slack / reserved integral
     held_peak: int = 0             # Σ per-replica peak held tokens
     recompute_ticks: int = 0       # prefill ticks re-paid for preempted work
+    # prefix sharing, aggregated over replicas (inert without sharing)
+    kv_amplification: float = 1.0  # Σ logical / Σ physical reserved steps
+    prefix_hits: int = 0           # admissions that reused shared pages
+    cow_copies: int = 0            # divergence-boundary pages privatized
+    prefill_ticks: int = 0         # prefill ticks actually paid
+    prefill_saved_ticks: int = 0   # prefill ticks erased by prefix hits
+    shared_peak: int = 0           # Σ per-replica peak shared tokens
     replica_rows: List[dict] = field(default_factory=list)
 
     def row(self) -> dict:
@@ -134,6 +149,11 @@ class Cluster:
         ``admit(request, engine, spec, now) -> bool``, e.g.
         :class:`~repro.serving.adaptation.AdmissionController`): requests it
         declines at dispatch are counted as ``rejected`` and never enqueued.
+    prefix_imbalance : ``prefix_affine`` only — how much extra load (in
+        requests, normalized by the holding replica's service rate) a
+        prefix-holding replica may carry over the lightest one before
+        affinity yields to jsq. 0 = pure load balancing, large = sticky
+        sessions.
 
     A ``predictor`` that also exposes ``observe`` (an
     :class:`~repro.serving.adaptation.OnlineAdapter`) switches :meth:`run`
@@ -146,13 +166,16 @@ class Cluster:
     def __init__(self, specs: Sequence[ReplicaSpec], policy: Policy,
                  router: str = "round_robin", predictor=None,
                  vectorized: bool = True, rebalance_every: int = 0,
-                 steal: str = "tail", steal_cost: int = 0, admission=None):
+                 steal: str = "tail", steal_cost: int = 0, admission=None,
+                 prefix_imbalance: float = 8.0):
         if router not in ROUTERS:
             raise ValueError(f"router {router!r} not in {ROUTERS}")
         if steal not in STEAL_MODES:
             raise ValueError(f"steal {steal!r} not in {STEAL_MODES}")
         if steal_cost < 0:
             raise ValueError("steal_cost must be >= 0")
+        if prefix_imbalance < 0:
+            raise ValueError("prefix_imbalance must be >= 0")
         specs = tuple(specs)
         if not specs:
             raise ValueError("need at least one ReplicaSpec")
@@ -165,6 +188,8 @@ class Cluster:
         self.steal = steal
         self.steal_cost = int(steal_cost)
         self.admission = admission
+        self.prefix_imbalance = float(prefix_imbalance)
+        self._prefix_home: dict = {}    # prefix_id -> last replica routed to
         self.stolen = 0
         self.steal_delay = 0
         self.steal_pages = 0
@@ -179,10 +204,11 @@ class Cluster:
 
     @classmethod
     def uniform(cls, n_replicas: int, max_slots: int, kv_budget: int,
-                policy: Policy, page_size: int = 1, **kw) -> "Cluster":
+                policy: Policy, page_size: int = 1,
+                share_prefixes: bool = False, **kw) -> "Cluster":
         """Homogeneous fleet — the pre-heterogeneity constructor shape."""
         spec = ReplicaSpec(max_slots=max_slots, kv_budget=kv_budget,
-                           page_size=page_size)
+                           page_size=page_size, share_prefixes=share_prefixes)
         return cls([spec] * n_replicas, policy, **kw)
 
     # -- dispatch ------------------------------------------------------------
@@ -196,7 +222,8 @@ class Cluster:
         if self.router == "psq":
             return [e.predicted_backlog() / s.service_rate
                     for e, s in zip(self.engines, self.specs)]
-        # jsq — and the rebalance metric for round_robin
+        # jsq — prefix_affine's base metric, and the rebalance metric for
+        # round_robin
         return [e.outstanding_requests / s.service_rate
                 for e, s in zip(self.engines, self.specs)]
 
@@ -211,9 +238,31 @@ class Cluster:
         # engine drops the request as unservable)
         need = int(req.prompt_len + req.reserve_len)
         fits = [i for i, s in enumerate(self.specs) if need <= s.kv_budget]
-        if fits and len(fits) < self.n_replicas:
-            return min(fits, key=lambda i: loads[i])
-        return int(np.argmin(loads))
+        pool = fits if fits and len(fits) < self.n_replicas \
+            else range(self.n_replicas)
+        best = min(pool, key=lambda i: loads[i])
+        if self.router != "prefix_affine" or req.prefix_id is None:
+            return best
+        # affinity: among the replicas whose pool still holds this prefix's
+        # shared pages, join the least loaded. For a prefix every replica has
+        # warmed (a hot system prompt) this degenerates to exactly jsq; a
+        # session context resident on one replica pulls its turns back there.
+        # A prefix queued but not yet admitted has no resident pages anywhere,
+        # so the replica the session was last routed to stands in as holder.
+        pid = req.prefix_id
+        holders = [i for i in pool if self.engines[i].kv.has_prefix(pid)]
+        if not holders:
+            home = self._prefix_home.get(pid)
+            if home is not None and home in pool:
+                holders = [home]
+        if holders:
+            near = min(holders, key=lambda i: loads[i])
+            if (loads[near] <= loads[best]
+                    + self.prefix_imbalance / self.specs[near].service_rate):
+                self._prefix_home[pid] = near
+                return near
+        self._prefix_home[pid] = best
+        return best
 
     # -- work stealing -------------------------------------------------------
 
@@ -298,6 +347,7 @@ class Cluster:
         for e in self.engines:
             e.reset()
         self._rr = 0
+        self._prefix_home = {}
         self.stolen = 0
         self.steal_delay = 0
         self.steal_pages = 0
@@ -385,8 +435,10 @@ class Cluster:
         reserved_steps = sum(e.kv.total_reserved_steps for e in self.engines)
         asked_steps = sum(e.kv.total_asked_steps for e in self.engines)
         used_steps = sum(e.kv.total_used_steps for e in self.engines)
+        logical_steps = sum(e.kv.total_logical_steps for e in self.engines)
         waste = (1.0 - used_steps / reserved_steps) if reserved_steps else 0.0
         frag = (1.0 - asked_steps / reserved_steps) if reserved_steps else 0.0
+        amp = (logical_steps / reserved_steps) if reserved_steps else 1.0
         capacity = sum(e.kv.capacity_tokens for e in self.engines)
         per_replica_toks = np.array(
             [sum(r.true_len for r in e.done) for e in self.engines], float)
@@ -416,6 +468,13 @@ class Cluster:
             frag_ratio=frag,
             held_peak=sum(e._held_peak for e in self.engines),
             recompute_ticks=sum(e.recompute_ticks for e in self.engines),
+            kv_amplification=amp,
+            prefix_hits=sum(e.kv.prefix_hits for e in self.engines),
+            cow_copies=sum(e.kv.cow_copies for e in self.engines),
+            prefill_ticks=sum(e.prefill_ticks for e in self.engines),
+            prefill_saved_ticks=sum(e.prefill_saved_ticks
+                                    for e in self.engines),
+            shared_peak=sum(e.kv.shared_peak for e in self.engines),
             replica_rows=[e.stats().row() for e in self.engines],
             **_latency_stats(done),
         )

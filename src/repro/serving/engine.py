@@ -59,12 +59,17 @@ class ReplicaSpec:
     page_size : KV-cache page granularity in tokens; reservations are whole
         pages (``kv_budget`` must be page-aligned). 1 reproduces the scalar
         token counter bit-exactly.
+    share_prefixes : back requests' declared common contexts
+        (``Request.prefix_id``/``prefix_len``) with ref-counted shared KV
+        pages + copy-on-write instead of private copies, and skip their
+        prefill. Off (the default) is bit-identical to a non-sharing pool.
     """
     max_slots: int
     kv_budget: int
     speed: int = 1
     prefill_tokens_per_step: int = 0
     page_size: int = 1
+    share_prefixes: bool = False
 
     def __post_init__(self):
         if self.max_slots <= 0 or self.kv_budget <= 0:
@@ -115,6 +120,14 @@ class ServeStats:
     held_steps: float = 0.0        # token-steps held while preempted-queued
     held_releases: int = 0         # held pages dropped to break memory stalls
     recompute_ticks: int = 0       # prefill ticks re-paid for preempted work
+    # prefix sharing (all inert unless share_prefixes=True + tagged requests)
+    kv_amplification: float = 1.0  # logical / physical reserved token-steps
+    prefix_hits: int = 0           # admissions that reused shared pages
+    cow_copies: int = 0            # divergence-boundary pages privatized
+    prefix_evictions: int = 0      # cached prefixes reclaimed under pressure
+    shared_peak: int = 0           # peak tokens in live shared pages
+    prefill_ticks: int = 0         # prefill ticks actually paid
+    prefill_saved_ticks: int = 0   # prefill ticks erased by prefix hits
 
     def row(self) -> dict:
         return self.__dict__.copy()
@@ -198,7 +211,8 @@ class SimEngine:
 
     def reset(self):
         self.kv = KVCacheManager(budget_tokens=self._kv_budget,
-                                 page_size=self.spec.page_size)
+                                 page_size=self.spec.page_size,
+                                 share_prefixes=self.spec.share_prefixes)
         self.t = 0.0
         self.preemptions = 0
         self.oom_evictions = 0
@@ -206,6 +220,8 @@ class SimEngine:
         self.timed_out = 0
         self.slo_violations = 0
         self.recompute_ticks = 0
+        self.prefill_ticks = 0
+        self.prefill_saved_ticks = 0
         self.held_releases = 0
         self._held_tokens = 0       # Σ tokens held by preempted waiters here
         self._held_ready = 0        # the ready-queue (releasable) part
@@ -229,6 +245,10 @@ class SimEngine:
         self._a_tlen = np.zeros(m, np.int64)
         self._a_pref = np.zeros(m, np.int64)    # remaining prefill ticks
         self._a_pred = np.zeros(m, np.float64)
+        self._a_shared = np.zeros(m, np.int64)  # grant tokens on shared pages
+        # Σ physical used tokens of active slots: each slot's (used − shared)
+        # — shared-page content is integrated once via kv.shared_now instead
+        # of once per referencing slot. Sharing off ⇒ plain Σ used.
         self._used_sum = 0
         self._done: List[Request] = []
         self._timed_out: List[Request] = []
@@ -377,12 +397,14 @@ class SimEngine:
 
     def adopt_held(self, r: Request) -> bool:
         """Thief side of a page handoff: re-reserve the migrated pages in
-        this pool, re-rounded to this replica's page size. On failure the
+        this pool, re-rounded to this replica's page size (joining this
+        pool's copy of the request's prefix, if resident). On failure the
         pages are dropped and the request reverts to recompute semantics
         (progress tokens kept, prefill re-paid)."""
         if not r.held:
             return False
-        if self.kv.admit(r.rid, r.held):
+        if self.kv.admit(r.rid, r.held, r.prefix_id,
+                         min(int(r.prefix_len), int(r.held))):
             r.held = self.kv.reserved[r.rid]
             self._held_tokens += r.held
             self._held_peak = max(self._held_peak, self._held_tokens)
@@ -392,20 +414,36 @@ class SimEngine:
 
     # -- one engine tick -----------------------------------------------------
 
+    @staticmethod
+    def _prefix_args(r: Request):
+        """The (prefix_id, prefix_len) pair every admission-path KV call must
+        pass identically — _admit, the stall breaker, and ticks_to_event —
+        or the event leap would disagree with the step about feasibility."""
+        return r.prefix_id, min(int(r.prefix_len), int(r.prompt_len))
+
     def _prefill_ticks(self, r: Request) -> int:
         """Admission cost: ceil(prompt tokens / prefill rate). A resumed
         request that kept its pages (``r.held``) has its prompt + progress
         KV already resident — no recompute. One that lost them recomputes
         prompt + generated progress (vLLM recompute-preemption semantics);
-        that whole resume charge is re-work, counted in ``recompute_ticks``."""
+        that whole resume charge is re-work, counted in ``recompute_ticks``.
+        Prompt tokens covered by a shared-prefix cache hit are already
+        resident too — they are skipped, and the erased ticks are counted in
+        ``prefill_saved_ticks``. Call after the KV reservation (the skip is
+        recorded at admit)."""
         pts = self.spec.prefill_tokens_per_step
         if pts <= 0:
             return 0
         if r.held > 0:
             return 0
-        ticks = -(-(r.prompt_len + r.generated) // pts)
+        work = r.prompt_len + r.generated
+        full = -(-work // pts)
+        skip = min(self.kv.prefill_skip(r.rid), r.prompt_len)
+        ticks = -(-(work - skip) // pts) if work > skip else 0
         if r.generated > 0:
             self.recompute_ticks += ticks
+        self.prefill_ticks += ticks
+        self.prefill_saved_ticks += full - ticks
         return ticks
 
     def _expire_ready_head(self):
@@ -466,7 +504,8 @@ class SimEngine:
             if max_n is not None and released >= max_n:
                 break
             if (spare is not None
-                    and self.kv.can_reserve(spare.rid, need)):
+                    and self.kv.can_reserve(spare.rid, need,
+                                            *self._prefix_args(spare))):
                 break
         return released
 
@@ -480,17 +519,18 @@ class SimEngine:
         while self._n_active < self.max_slots and self._ready:
             _, _, cand = self._ready[0]
             need = int(cand.prompt_len + cand.reserve_len)
-            if not self.kv.can_reserve(cand.rid, need):
+            pfx = self._prefix_args(cand)
+            if not self.kv.can_reserve(cand.rid, need, *pfx):
                 # nothing active to free memory, yet queued holders pin the
                 # pool: release their pages (recompute for them) so the head
                 # can start — without this, keep mode can wedge the queue
                 if not (self._n_active == 0
                         and self._held_ready > cand.held
                         and self._release_queued_held(cand, need)
-                        and self.kv.can_reserve(cand.rid, need)):
+                        and self.kv.can_reserve(cand.rid, need, *pfx)):
                     break  # KV-bound: head-of-line blocks on memory
-            self.kv.reserve(cand.rid, need)   # full need, or delta if holding
-            self._pop_ready()
+            self.kv.reserve(cand.rid, need, *pfx)  # full need (joining the
+            self._pop_ready()                      # prefix), delta if holding
             if cand.t_start is None:
                 cand.t_start = self.t
             i = self._n_active
@@ -504,10 +544,11 @@ class SimEngine:
             self._a_pred[i] = (cand.predicted_len
                                if cand.predicted_len is not None
                                else float(cand.true_len))
+            self._a_shared[i] = self.kv.shared_tokens_of(cand.rid)
             if cand.held:                        # kept pages now active again
                 self._held_tokens -= cand.held
                 cand.held = 0
-            self._used_sum += int(self._a_used[i])
+            self._used_sum += int(self._a_used[i]) - int(self._a_shared[i])
             self._n_active += 1
             self._expire_ready_head()
 
@@ -534,7 +575,7 @@ class SimEngine:
                 self._held_peak = max(self._held_peak, self._held_tokens)
             else:
                 self.kv.release(victim.rid)
-            self._used_sum -= int(self._a_used[v])
+            self._used_sum -= int(self._a_used[v]) - int(self._a_shared[v])
             self._drop_slot(v)
             self._push_ready(victim)   # resumes later with progress kept
             self.preemptions += 1
@@ -544,7 +585,7 @@ class SimEngine:
         n = self._n_active
         self._slots.pop(i)
         for a in (self._a_gen, self._a_used, self._a_res, self._a_plen,
-                  self._a_tlen, self._a_pref, self._a_pred):
+                  self._a_tlen, self._a_pref, self._a_pred, self._a_shared):
             a[i:n - 1] = a[i + 1:n]
         self._n_active = n - 1
 
@@ -555,7 +596,7 @@ class SimEngine:
         if r.deadline is not None and r.t_finish > r.deadline:
             self.slo_violations += 1
         self.kv.release(r.rid)
-        self._used_sum -= int(self._a_used[i])
+        self._used_sum -= int(self._a_used[i]) - int(self._a_shared[i])
         self._drop_slot(i)
         self._done.append(r)
 
@@ -631,7 +672,7 @@ class SimEngine:
                   victim.generated + float(max(16, self.spec.speed)))
         ask = min(ask, float(self.kv.budget_tokens - victim.prompt_len))
         self.kv.release(victim.rid)
-        self._used_sum -= int(self._a_used[v])
+        self._used_sum -= int(self._a_used[v]) - int(self._a_shared[v])
         self._drop_slot(v)
         self.oom_evictions += 1
         if int(victim.prompt_len + ask) <= victim.prompt_len + victim.generated:
@@ -678,10 +719,15 @@ class SimEngine:
             self._decode_tick_vec()
         else:
             self._decode_tick_ref()
-        # reservation/usage integrals (waste metric), kept on the KV manager
+        # reservation/usage integrals (waste metric), kept on the KV manager.
+        # Physical usage = active slots' private content + each live shared
+        # page's content once (shared_now); the logical integral is what a
+        # sharing-blind pool would have reserved (kv_amplification's
+        # numerator). Sharing off: shared_now == 0, logical == reserved.
         self.kv.total_reserved_steps += self.kv.reserved_now
         self.kv.total_asked_steps += self.kv.asked_now
-        self.kv.total_used_steps += self._used_sum
+        self.kv.total_used_steps += self._used_sum + self.kv.shared_now
+        self.kv.total_logical_steps += self.kv.logical_now
         self._held_steps += self._held_tokens
 
     def advance_to(self, t: float):
@@ -708,7 +754,8 @@ class SimEngine:
             if self.kv.pages_for(need) > self.kv.pages_total:
                 return 1.0   # unservable-head drop fires next tick
             if self._n_active < self.max_slots and (
-                    self.kv.can_reserve(cand.rid, need)
+                    self.kv.can_reserve(cand.rid, need,
+                                        *self._prefix_args(cand))
                     # conservative: the held-pages stall breaker may free
                     # enough for the head — let the real step decide
                     or (self._n_active == 0 and self._held_ready > cand.held)):
@@ -755,9 +802,11 @@ class SimEngine:
             rate = int(add.sum())   # decode tokens emitted per tick
         else:
             rate = 0
-        self.kv.total_used_steps += q * self._used_sum + rate * q * (q + 1) // 2
+        self.kv.total_used_steps += (q * (self._used_sum + self.kv.shared_now)
+                                     + rate * q * (q + 1) // 2)
         self.kv.total_reserved_steps += q * self.kv.reserved_now
         self.kv.total_asked_steps += q * self.kv.asked_now
+        self.kv.total_logical_steps += q * self.kv.logical_now
         self._held_steps += q * self._held_tokens
         self._used_sum += rate * q
         self.t += float(q)
@@ -815,6 +864,13 @@ class SimEngine:
             held_steps=self._held_steps,
             held_releases=self.held_releases,
             recompute_ticks=self.recompute_ticks,
+            kv_amplification=self.kv.kv_amplification,
+            prefix_hits=self.kv.prefix_hits,
+            cow_copies=self.kv.cow_copies,
+            prefix_evictions=self.kv.prefix_evictions,
+            shared_peak=self.kv.shared_peak,
+            prefill_ticks=self.prefill_ticks,
+            prefill_saved_ticks=self.prefill_saved_ticks,
             **_latency_stats(self._done),
         )
 

@@ -31,6 +31,14 @@ class Request:
     setting: Optional[str] = None       # "model/scenario" the law came from
     deadline: Optional[float] = None    # absolute SLO: must finish by this step
     replica: Optional[int] = None       # router-assigned replica index
+    # shared-context provenance: the first prefix_len prompt tokens are the
+    # context named prefix_id (a chat session's accumulated turns, an agentic
+    # loop's growing scratchpad, or a per-scenario system prompt). A
+    # share_prefixes=True KV pool backs those tokens with ref-counted shared
+    # pages, and the prefix_affine router keeps the session on the replica
+    # already holding them. None/0 = no shared context (unchanged behavior)
+    prefix_id: Optional[str] = None
+    prefix_len: int = 0
     # engine bookkeeping
     t_start: Optional[float] = None
     t_finish: Optional[float] = None
@@ -85,7 +93,7 @@ def workload_from_scenario(
     for i, (j, t) in enumerate(zip(idx, arrivals)):
         reqs.append(Request(
             rid=i, arrival=float(t),
-            prompt_len=int(rng.integers(16, 256)),
+            prompt_len=int(rng.integers(16, 256, endpoint=True)),
             true_len=int(data.len_test[j, -1]),
             phi=data.phi_test["last"][j],
         ))

@@ -78,6 +78,34 @@ class TestArrivals:
             rate = len(ts) / ts[-1]
             assert rate == pytest.approx(2.0, rel=0.25), pattern
 
+    def test_prompt_max_is_reachable(self):
+        """Regression: the prompt sampler excluded its own upper bound
+        (``rng.integers`` is right-open without ``endpoint=True``), so the
+        configured prompt_max never appeared in any trace."""
+        reqs = _trace(3000, prompt_min=16, prompt_max=32)
+        lens = {r.prompt_len for r in reqs}
+        assert max(lens) == 32          # 3000 draws over 17 values: certain
+        assert min(lens) >= 16
+
+    def test_negative_diurnal_amp_rejected(self):
+        with pytest.raises(ValueError):
+            TraceConfig(n_requests=10, rate=1.0, diurnal_amp=-0.2)
+
+    def test_diurnal_amp_over_one_keeps_mean_rate(self):
+        """Regression: amp > 1 clips the sinusoid at 0 but the old lambda
+        normalization ignored the clipping, inflating the realized rate
+        ~9% at amp=1.5. The renormalized intensity must hold the configured
+        mean over whole periods (and produce dead troughs)."""
+        cfg = TraceConfig(n_requests=20_000, pattern="diurnal", rate=2.0,
+                          diurnal_period=500.0, diurnal_amp=1.5)
+        ts = arrival_times(cfg, np.random.default_rng(1))
+        assert len(ts) / ts[-1] == pytest.approx(2.0, rel=0.04)
+        # the clipped trough really is silent: the sin<0 quarter around the
+        # minimum (phase 0.75) has lambda == 0 for amp > 1
+        phase = np.mod(ts, cfg.diurnal_period) / cfg.diurnal_period
+        dead = np.sum((phase > 0.70) & (phase < 0.80))
+        assert dead == 0
+
 
 class TestLatentOracle:
     def test_quantiles_monotone_and_above_median(self):

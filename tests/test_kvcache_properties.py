@@ -242,8 +242,13 @@ class TestPagedAllocator:
             assert kv.pages_free == len(kv._free_ids)
             for rid, granted in kv.reserved.items():
                 assert granted == len(kv.page_table.get(rid, [])) * page_size
-                assert kv.asked[rid] <= granted < kv.asked[rid] + page_size \
-                    or (kv.asked[rid] == granted == 0)
+                # the grant covers the ask and is page-rounded; it may exceed
+                # ask + page_size when an overflow grow's one-page minimum
+                # lands on top of rounding slack (that slack is exactly what
+                # frag_ratio prices — the ask itself never inflates to meet
+                # the grant, which was the pre-fix accounting drift)
+                assert kv.asked[rid] <= granted
+                assert granted % page_size == 0
             assert 0.0 <= kv.fragmentation() <= 1.0
 
     @given(st.integers(0, 100_000), st.sampled_from([1, 5, 32]))
@@ -310,6 +315,41 @@ class TestPagedAllocator:
             assert kv.total_used_steps == shadow.total_used_steps
             assert kv.waste_ratio == shadow.waste_ratio
             assert kv.frag_ratio == 0.0       # no page rounding at size 1
+
+    def test_grow_charges_only_the_requested_extra_to_the_ask(self):
+        """Regression (pre-fix: ``want = max(asked + extra, reserved + 1)``
+        inflated the ask to the grant frontier whenever rounding slack
+        absorbed ``extra``, silently understating frag_ratio): a grow's ask
+        must rise by exactly ``extra``, even though the grant still adds at
+        least one whole page."""
+        kv = KVCacheManager(budget_tokens=160, page_size=16)
+        assert kv.admit(0, 10)                # asked 10, granted 16
+        assert kv.grow(0, 2)                  # slack absorbs the 2 tokens...
+        assert kv.asked[0] == 12              # ...pre-fix this said 17
+        assert kv.asked_now == 12
+        assert kv.reserved[0] == 32           # grant math unchanged: +1 page
+        # the page-rounding slack now shows up as fragmentation
+        kv.tick()
+        assert kv.total_asked_steps == 12.0
+        assert kv.total_reserved_steps == 32.0
+
+    @given(st.integers(0, 100_000), st.sampled_from([1, 7, 16, 64]))
+    def test_can_reserve_iff_reserve_succeeds(self, seed, page_size):
+        """``can_reserve`` and ``reserve`` share one ``want``: across random
+        op sequences, for fresh rids, live holders, and shrunk (keep-mode)
+        holders alike, the feasibility probe answers exactly whether the
+        grant would succeed (probed on a deep copy so the stream is
+        undisturbed)."""
+        import copy
+
+        rng = np.random.default_rng(seed)
+        kv = KVCacheManager(budget_tokens=960, page_size=page_size)
+        for kv, live, holding in _apply_paged_ops(rng, 60, kv):
+            pool = live + [rid for rid, _ in holding] + [9_999_999]
+            rid = pool[int(rng.integers(0, len(pool)))]
+            n = int(rng.integers(1, kv.budget_tokens + 200))
+            probe = copy.deepcopy(kv)
+            assert kv.can_reserve(rid, n) == probe.reserve(rid, n)
 
     def test_shrink_keeps_filled_pages_and_frees_the_rest(self):
         kv = KVCacheManager(budget_tokens=128, page_size=16, track_pages=True)

@@ -1,0 +1,386 @@
+"""Ref-counted shared prefix pages + copy-on-write: pool invariants, the
+no-sharing golden (bit-identical to the plain pool), session-trace
+vectorized-vs-reference regressions, and prefix-affinity routing."""
+
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.serving.arrivals import (LatentOracle, TraceConfig, make_trace,
+                                    stable_rate_specs)
+from repro.serving.cluster import Cluster
+from repro.serving.engine import ReplicaSpec, SimEngine
+from repro.serving.kvcache import KVCacheManager
+from repro.serving.scheduler import Policy
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _kv(budget=1024, ps=16, track=True):
+    return KVCacheManager(budget_tokens=budget, page_size=ps,
+                          track_pages=track, share_prefixes=True)
+
+
+def _session_trace(n=260, seed=0, rate=0.6):
+    """Small single-setting trace with system prompts + chat + agentic."""
+    return make_trace(TraceConfig(
+        n_requests=n, rate=rate, seed=seed, model="qwen", scenario="math",
+        session_frac=0.3, agentic_frac=0.3, system_prompt_len=64,
+        session_gap_mean=30.0, agentic_gap_mean=2.0, prompt_min=16,
+        prompt_max=48, max_seq_len=512))
+
+
+def _pages_allocated(kv):
+    """Every allocated page, by owner: private page tables + prefix entries."""
+    priv = sum(len(t) for t in kv.page_table.values())
+    pfx = sum(len(e.ids) for e in kv.prefixes.values())
+    return priv, pfx
+
+
+def _check_conservation(kv):
+    priv, pfx = _pages_allocated(kv)
+    assert len(kv._free_ids) + priv + pfx == kv.pages_total
+    ids = kv._free_ids + [i for t in kv.page_table.values() for i in t] \
+        + [i for e in kv.prefixes.values() for i in e.ids]
+    assert sorted(ids) == list(range(kv.pages_total))  # no leak, no double
+    assert kv.pages_free == len(kv._free_ids)
+    for e in kv.prefixes.values():
+        assert e.refs >= 0
+        assert e.pages == len(e.ids)
+
+
+class TestSharedPool:
+    def test_two_holders_share_physical_pages(self):
+        kv = _kv()
+        assert kv.admit(0, 96, "p", 64)     # miss: registers 4 prefix pages
+        assert kv.admit(1, 96, "p", 64)     # hit: attaches to them
+        assert kv.prefix_misses == 1 and kv.prefix_hits == 1
+        # physical: 4 shared + 2x2 private; logical: 2 x 6 pages
+        assert kv.reserved_now == (4 + 2 + 2) * 16
+        assert kv.logical_now == 2 * 96
+        assert kv.shared_now == 64 and kv.shared_pages == 4
+        assert kv.shared_tokens_of(0) == 64 == kv.shared_tokens_of(1)
+        assert kv.prefill_skip(1) == 64     # second admit skips the prefix
+        assert kv.prefill_skip(0) == 0      # first one prefills it
+        _check_conservation(kv)
+
+    def test_no_page_freed_while_shared(self):
+        kv = _kv(budget=256)
+        assert kv.admit(0, 96, "p", 64)
+        assert kv.admit(1, 96, "p", 64)
+        free_before = kv.pages_free
+        kv.release(0)
+        # only rid 0's 2 private pages return; the 4 shared pages stay
+        assert kv.pages_free == free_before + 2
+        assert kv.prefixes["p"].refs == 1
+        assert kv.shared_now == 64
+        _check_conservation(kv)
+        kv.release(1)
+        # last holder gone: pages move to retained cache, still not free
+        assert kv.pages_free == free_before + 4
+        assert kv.prefixes["p"].refs == 0
+        assert kv.shared_now == 0 and kv.cached_now == 64
+        _check_conservation(kv)
+
+    def test_retained_cache_revives_for_free(self):
+        kv = _kv()
+        assert kv.admit(0, 96, "p", 64)
+        kv.release(0)
+        assert kv.cached_now == 64
+        assert kv.has_prefix("p")
+        assert kv.admit(1, 96, "p", 64)     # revival: a hit, not a miss
+        assert kv.prefix_hits == 1 and kv.prefix_misses == 1
+        assert kv.cached_now == 0 and kv.shared_now == 64
+        assert kv.prefill_skip(1) == 64
+        _check_conservation(kv)
+
+    def test_lru_eviction_only_under_pressure(self):
+        kv = _kv(budget=8 * 16)             # 8 pages
+        assert kv.admit(0, 32, "a", 32)     # 2 prefix pages
+        kv.release(0)
+        assert kv.admit(1, 32, "b", 32)     # 2 more
+        kv.release(1)
+        assert kv.cached_now == 64 and kv.prefix_evictions == 0
+        # needs 6 pages, only 4 free: evicts "a" (oldest) then "b"
+        assert kv.admit(2, 96)
+        assert kv.prefix_evictions >= 1
+        assert not kv.has_prefix("a")       # LRU order: "a" went first
+        _check_conservation(kv)
+
+    def test_cow_privatizes_boundary_page_and_preserves_totals(self):
+        kv = _kv()
+        assert kv.admit(0, 96, "p", 48)     # registers 3 full prefix pages
+        # rid 1 diverges inside page 2 of the prefix (40 = 2 pages + 8 tokens)
+        used_before = kv.used_now
+        assert kv.admit(1, 96, "p", 40)
+        assert kv.cow_copies == 1
+        assert kv.shared_tokens_of(1) == 32  # only the 2 whole pages shared
+        assert kv.prefill_skip(1) == 40      # copied content still skips
+        assert kv.used_now == used_before    # cow moves pages, not usage
+        kv.use(0, 50)
+        kv.use(1, 60)
+        assert kv.used_now == 110            # per-request used totals intact
+        assert kv.used[0] == 50 and kv.used[1] == 60
+        # both grants are full-size: the cow page is rid 1's own
+        assert kv.reserved[0] == 96 == kv.reserved[1]
+        assert kv.logical_now == 192
+        assert kv.reserved_now == 192 - 32   # only 2 pages deduplicated
+        _check_conservation(kv)
+
+    def test_later_admit_extends_prefix(self):
+        kv = _kv()
+        assert kv.admit(0, 64, "p", 32)     # 2 prefix pages
+        assert kv.admit(1, 128, "p", 96)    # extends the store to 6 pages
+        assert kv.prefixes["p"].pages == 6
+        assert kv.shared_tokens_of(1) == 96
+        assert kv.prefill_skip(1) == 32     # only the resident part skips
+        _check_conservation(kv)
+
+    def test_shrink_never_gives_back_shared_pages(self):
+        kv = _kv()
+        assert kv.admit(0, 96, "p", 64)
+        assert kv.shrink(0, 0) >= 64        # clamped at the shared tokens
+        assert kv.shared_now == 64
+        _check_conservation(kv)
+
+    def test_kv_amplification_integral(self):
+        kv = _kv()
+        assert kv.admit(0, 96, "p", 64)
+        assert kv.admit(1, 96, "p", 64)
+        for _ in range(10):
+            kv.tick()
+        assert kv.kv_amplification == pytest.approx(192 / 128)
+        assert kv.peak_logical > kv.peak_reserved
+
+    def test_sharing_off_pool_is_bit_identical(self):
+        """The same op stream on share_prefixes=False vs True (no prefixes
+        declared) leaves identical books — sharing is pay-for-use."""
+        a = KVCacheManager(budget_tokens=512, page_size=16, track_pages=True)
+        b = _kv(budget=512)
+        rng = np.random.default_rng(0)
+        for step in range(200):
+            rid = int(rng.integers(0, 6))
+            op = int(rng.integers(0, 4))
+            if op == 0 and rid not in a.reserved:
+                n = int(rng.integers(1, 128))
+                assert a.admit(rid, n) == b.admit(rid, n)
+            elif op == 1 and rid in a.reserved:
+                e = int(rng.integers(1, 32))
+                assert a.grow(rid, e) == b.grow(rid, e)
+            elif op == 2 and rid in a.reserved:
+                a.use(rid); b.use(rid)
+            elif op == 3 and rid in a.reserved:
+                a.release(rid); b.release(rid)
+            a.tick(); b.tick()
+            assert (a.reserved, a.asked, a.used) == (b.reserved, b.asked, b.used)
+            assert a.pages_free == b.pages_free
+            assert a.total_reserved_steps == b.total_reserved_steps
+            assert b.logical_now == b.reserved_now       # no sharing: equal
+            assert b.kv_amplification == 1.0
+
+    def test_can_reserve_iff_reserve_with_prefixes(self):
+        """can_reserve == reserve-would-succeed, now over prefix-carrying
+        admits against a crowded pool with reclaimable cache."""
+        rng = np.random.default_rng(7)
+        kv = _kv(budget=512)
+        live = []
+        for step in range(300):
+            rid = int(rng.integers(0, 8))
+            pid = ["p", "q", None][int(rng.integers(0, 3))]
+            plen = int(rng.integers(0, 96))
+            n = int(rng.integers(1, 256))
+            probe = copy.deepcopy(kv)
+            assert kv.can_reserve(rid, n, pid, plen) == \
+                probe.reserve(rid, n, pid, plen)
+            if kv.reserve(rid, n, pid, plen) and rid not in live:
+                live.append(rid)
+            if live and rng.random() < 0.3:
+                kv.release(live.pop(int(rng.integers(0, len(live)))))
+            _check_conservation(kv)
+
+
+class TestSharedPoolProperties:
+    @given(seed=st.integers(0, 2**32 - 1), ps=st.sampled_from([1, 7, 16]))
+    def test_random_stream_invariants(self, seed, ps):
+        """Random admit/grow/use/release streams with prefixes: refcounts
+        never negative, pages conserved (free + private tables + prefix
+        entries partition the pool), no page freed while shared, and the
+        physical books never exceed the logical ones."""
+        rng = np.random.default_rng(seed)
+        kv = KVCacheManager(budget_tokens=ps * 40, page_size=ps,
+                            track_pages=True, share_prefixes=True)
+        live = []
+        for step in range(120):
+            op = int(rng.integers(0, 5))
+            if op <= 1:
+                rid = step
+                pid = [None, "a", "b", "c"][int(rng.integers(0, 4))]
+                plen = int(rng.integers(0, 5 * ps))
+                n = int(rng.integers(1, 12 * ps))
+                if kv.admit(rid, n, pid, plen):
+                    live.append(rid)
+            elif op == 2 and live:
+                kv.grow(live[int(rng.integers(0, len(live)))],
+                        int(rng.integers(1, 3 * ps)))
+            elif op == 3 and live:
+                kv.use(live[int(rng.integers(0, len(live)))])
+            elif op == 4 and live:
+                kv.release(live.pop(int(rng.integers(0, len(live)))))
+            kv.tick()
+            _check_conservation(kv)
+            # private pages never exceed the logical grants backing them
+            # (reserved_now itself may: a live prefix can hold pages beyond
+            # what its current holders' grants cover, e.g. after the request
+            # that extended it released)
+            assert kv.reserved_now - kv.shared_now <= kv.logical_now
+            # live prefix tokens == sum over refs>0 entries
+            assert kv.shared_now == sum(
+                e.pages for e in kv.prefixes.values() if e.refs > 0) * ps
+            assert kv.cached_now == sum(
+                e.pages for e in kv.prefixes.values() if e.refs == 0) * ps
+        for rid in list(live):
+            kv.release(rid)
+        _check_conservation(kv)
+        assert kv.shared_now == 0
+        assert all(e.refs == 0 for e in kv.prefixes.values())
+
+
+def _stats_and_finishes(cl, reqs):
+    st_ = cl.run(reqs)
+    done = sorted((r.rid, r.t_start, r.t_finish)
+                  for e in cl.engines for r in e.done)
+    return st_.row(), done
+
+
+SPEC = ReplicaSpec(max_slots=8, kv_budget=4096, page_size=16,
+                   prefill_tokens_per_step=64)
+SHARED_SPEC = dataclasses.replace(SPEC, share_prefixes=True)
+POL = Policy("fcfs", "quantile", quantile=0.9, max_seq_len=512)
+
+
+class TestEngineAndCluster:
+    def test_sharing_off_cluster_bit_identical_on_session_trace(self):
+        """share_prefixes=False must ignore prefix metadata entirely: a
+        session trace replays bit-identically to the same trace with its
+        prefix fields stripped (the PR-5 pool's view of it)."""
+        reqs = _session_trace()
+        bare = [dataclasses.replace(r, prefix_id=None, prefix_len=0)
+                for r in reqs]
+        pred = LatentOracle()
+        a = _stats_and_finishes(Cluster([SPEC] * 2, POL, router="jsq",
+                                        predictor=pred), reqs)
+        b = _stats_and_finishes(Cluster([SPEC] * 2, POL, router="jsq",
+                                        predictor=pred), bare)
+        assert a == b
+
+    @pytest.mark.parametrize("router", ["jsq", "prefix_affine"])
+    def test_vec_matches_ref_with_sharing(self, router):
+        """The event-leap fast path must stay bit-identical to the reference
+        stepper with prefix sharing on and session traffic flowing."""
+        reqs = _session_trace()
+        pred = LatentOracle()
+        v = _stats_and_finishes(
+            Cluster([SHARED_SPEC] * 2, POL, router=router, predictor=pred,
+                    vectorized=True), reqs)
+        r = _stats_and_finishes(
+            Cluster([SHARED_SPEC] * 2, POL, router=router, predictor=pred,
+                    vectorized=False), reqs)
+        assert v == r
+
+    def test_engine_prefill_skip_saves_ticks(self):
+        reqs = _session_trace(n=200)
+        pred = LatentOracle()
+        e_off = SimEngine(policy=POL, predictor=pred, spec=SPEC)
+        e_on = SimEngine(policy=POL, predictor=pred, spec=SHARED_SPEC)
+        s_off = e_off.run(reqs)
+        s_on = e_on.run(reqs)
+        assert s_off.prefill_saved_ticks == 0
+        assert s_off.kv_amplification == 1.0
+        assert s_on.prefill_saved_ticks > 0
+        assert s_on.prefill_ticks < s_off.prefill_ticks
+        assert s_on.kv_amplification > 1.0
+        assert s_on.prefix_hits > 0
+        assert len(e_on.done) == len(e_off.done) == len(reqs)
+
+    def test_prefix_affine_equals_jsq_without_prefixes(self):
+        reqs = make_trace(TraceConfig(n_requests=200, rate=0.6, seed=1,
+                                      model="qwen", scenario="math",
+                                      max_seq_len=512))
+        pred = LatentOracle()
+        a = _stats_and_finishes(Cluster([SHARED_SPEC] * 3, POL, router="jsq",
+                                        predictor=pred), reqs)
+        b = _stats_and_finishes(Cluster([SHARED_SPEC] * 3, POL,
+                                        router="prefix_affine",
+                                        predictor=pred), reqs)
+        assert a[1] == b[1]
+
+    def test_prefix_affine_routes_turns_to_holder(self):
+        """Session turns follow their context: the affinity router lands
+        more prefix hits (and skips more prefill) than jsq spreading."""
+        reqs = _session_trace(n=400, rate=0.8)
+        pred = LatentOracle()
+        hits = {}
+        for router in ("jsq", "prefix_affine"):
+            cl = Cluster([SHARED_SPEC] * 3, POL, router=router,
+                         predictor=pred)
+            st_ = cl.run(reqs)
+            hits[router] = (st_.prefix_hits, st_.prefill_saved_ticks)
+            assert st_.completed == len(reqs)
+        assert hits["prefix_affine"][0] > hits["jsq"][0]
+        assert hits["prefix_affine"][1] > hits["jsq"][1]
+
+    def test_prefix_imbalance_zero_is_pure_load_balancing(self):
+        """With zero tolerated imbalance, affinity only fires on ties — the
+        cluster still completes everything and stays balanced."""
+        reqs = _session_trace(n=300, rate=0.8)
+        cl = Cluster([SHARED_SPEC] * 3, POL, router="prefix_affine",
+                     predictor=LatentOracle(), prefix_imbalance=0.0)
+        st_ = cl.run(reqs)
+        assert st_.completed == len(reqs)
+        assert st_.balance < 2.0
+
+    def test_session_trace_shape(self):
+        """Generator wiring: system prompts lengthen every base prompt, turn
+        requests extend their session's context, arrivals stay sorted per
+        session, and prefix_len never exceeds prompt_len."""
+        reqs = _session_trace(n=300)
+        base = [r for r in reqs if r.rid < 300]
+        turns = [r for r in reqs if r.rid >= 300]
+        assert turns, "session knobs produced no turns"
+        assert all(r.prefix_id == f"sys/{r.setting}" for r in base)
+        assert all(0 <= r.prefix_len <= r.prompt_len for r in reqs)
+        by_sid = {}
+        for r in turns:
+            assert r.prefix_id.startswith(("chat/", "agent/"))
+            by_sid.setdefault(r.prefix_id, []).append(r)
+        for sid, rs in by_sid.items():
+            rs.sort(key=lambda r: r.rid)
+            seed_rid = int(sid.split("/")[1])
+            seed = next(r for r in reqs if r.rid == seed_rid)
+            assert rs[0].arrival > seed.arrival
+            for a, b in zip(rs, rs[1:]):
+                assert b.arrival > a.arrival      # turns are causal
+                assert b.prefix_len > a.prefix_len  # context keeps growing
+            for r in rs:
+                assert r.setting == seed.setting
+
+    def test_no_session_knobs_trace_unchanged(self):
+        """has_sessions=False leaves the base trace bit-identical — the
+        session generator draws from its own RNG stream after the fact."""
+        plain = make_trace(TraceConfig(n_requests=200, rate=0.7, seed=4,
+                                       model="qwen", scenario="math",
+                                       prompt_min=16, prompt_max=48,
+                                       max_seq_len=512))
+        with_knobs = _session_trace(n=200, seed=4, rate=0.7)
+        base = [r for r in with_knobs if r.rid < 200]
+        sys_len = 64
+        for p, b in zip(plain, base):
+            assert (p.rid, p.arrival, p.true_len) == (b.rid, b.arrival,
+                                                      b.true_len)
+            assert b.prompt_len == p.prompt_len + sys_len
+            np.testing.assert_array_equal(p.phi, b.phi)
