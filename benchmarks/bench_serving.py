@@ -654,6 +654,121 @@ def validate_cluster_prefix(rows) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill: TTFT vs throughput under a per-step token budget
+# ---------------------------------------------------------------------------
+
+CHUNKED_MATRIX = (
+    # (label, order, chunk_order, prefill_chunk_tokens) — all four rows run
+    # the SAME per-step token budget. "atomic" is the non-chunked baseline
+    # (a prefilling tick dedicates the whole budget to one prompt; decode
+    # pauses); the chunked rows stream prompts in chunks interleaved with
+    # decode. The last row is the ProD-aware stack: predicted-short-first
+    # admission AND predicted-short-first chunk allocation.
+    ("atomic", "fcfs", "fcfs", 0),
+    ("chunked", "fcfs", "fcfs", 32),
+    ("chunked", "fcfs", "prod", 32),       # chunk_order knob in isolation
+    ("chunked", "sjf_pred", "prod", 32),   # full ProD-aware stack
+)
+
+
+def run_cluster_chunked(n_requests=50_000, n_replicas=4, max_slots=16,
+                        load=0.9, seed=0, budget=96, chunk=32, verbose=True):
+    """Chunked prefill under a shared per-step token budget: TTFT vs
+    throughput. One heavy-tailed mixed-scenario trace replayed at the same
+    ``step_token_budget`` across :data:`CHUNKED_MATRIX`. Slot decode speed
+    is the binding resource at ``load``; the budget binds on ticks where
+    prompts stream in, which is exactly where chunking and the
+    ``chunk_order`` knob act. Reports the TTFT percentiles the chunked
+    engine records per request."""
+    base = dict(n_requests=n_requests, model="mix", scenario="mix",
+                seed=seed, prompt_min=64, prompt_max=512,
+                slo_factor=40.0, slo_floor=8000.0)
+    if n_requests <= 0:
+        print("empty trace (n_requests=0): nothing to replay")
+        return []
+    probe = make_trace(TraceConfig(rate=1.0, **dict(base, n_requests=2000)))
+    ml = mean_true_length(probe)
+    mp = float(np.mean([r.prompt_len for r in probe]))
+    speed = 2
+    # per-slot service time: chunked prefill ticks + decode ticks; rate puts
+    # the slot pool (the binding resource) at `load` utilization
+    service = mp / chunk + ml / speed
+    rate = load * n_replicas * max_slots / service
+    cfg = TraceConfig(rate=rate, **base)
+    t0 = time.time()
+    reqs = make_trace(cfg)
+    if verbose:
+        print(f"chunked trace: {len(reqs)} requests (rate {rate:.3f}/step, "
+              f"mean len {ml:.0f}, mean prompt {mp:.0f}, budget {budget}, "
+              f"chunk {chunk}) built in {time.time() - t0:.1f}s")
+        print(f"  {'mode':8s} {'order':9s} {'chunks':6s} {'meanTTFT':>9s} "
+              f"{'p50TTFT':>8s} {'p99TTFT':>9s} {'thr':>7s} {'p99lat':>9s} "
+              f"{'secs':>6s}")
+    oracle = make_oracle(cfg)
+    rows = []
+    for label, order, corder, ck in CHUNKED_MATRIX:
+        pol = Policy(order, "quantile", quantile=0.9, max_seq_len=4096,
+                     chunk_order=corder)
+        specs = tuple(ReplicaSpec(max_slots=max_slots, kv_budget=65_536,
+                                  page_size=16, speed=speed,
+                                  step_token_budget=budget,
+                                  prefill_chunk_tokens=ck)
+                      for _ in range(n_replicas))
+        t0 = time.time()
+        st = Cluster(specs, pol, router="jsq", predictor=oracle).run(reqs)
+        dt = time.time() - t0
+        row = st.row()
+        row.update(mode=label, chunk_order=corder, chunk=ck, seconds=dt)
+        rows.append(row)
+        if verbose:
+            print(f"  {label:8s} {order:9s} {corder:6s} {st.mean_ttft:9.1f} "
+                  f"{st.p50_ttft:8.1f} {st.p99_ttft:9.1f} "
+                  f"{st.throughput:7.2f} {st.p99_latency:9.1f} {dt:6.1f}")
+    return rows
+
+
+def validate_cluster_chunked(rows) -> dict:
+    if not rows:
+        return {"empty_trace": True}
+    by = {(r["mode"], r["policy"].split("+")[0], r["chunk_order"]): r
+          for r in rows}
+    atomic = by[("atomic", "fcfs", "fcfs")]
+    cf = by[("chunked", "fcfs", "fcfs")]
+    ck = by[("chunked", "fcfs", "prod")]
+    cp = by[("chunked", "sjf_pred", "prod")]
+    n = rows[0]["completed"] + rows[0]["timed_out"] + rows[0]["dropped"] \
+        + rows[0]["rejected"]
+    return {
+        "all_accounted": all(
+            r["completed"] + r["timed_out"] + r["dropped"] + r["rejected"]
+            == n for r in rows),
+        # acceptance: the ProD-aware chunked stack beats the atomic FCFS
+        # baseline on p99 TTFT by >2x at equal-or-better throughput
+        "prod_chunked_beats_fcfs_atomic_p99_ttft":
+            cp["p99_ttft"] < 0.5 * atomic["p99_ttft"],
+        "p99_ttft_gain_x": atomic["p99_ttft"] / max(cp["p99_ttft"], 1e-9),
+        # ... and beats FCFS chunk allocation on mean TTFT (SJF-on-chunks
+        # pulls short answers' first tokens forward) at equal throughput
+        "prod_beats_fcfs_chunked_mean_ttft":
+            cp["mean_ttft"] < cf["mean_ttft"],
+        "mean_ttft_gain_pct":
+            100.0 * (1.0 - cp["mean_ttft"] / max(cf["mean_ttft"], 1e-9)),
+        "throughput_equal": cp["throughput"] >= 0.97 * cf["throughput"]
+        and cp["throughput"] >= atomic["throughput"],
+        # the chunk_order knob alone (fcfs admission) must not cost
+        # throughput; its mean-TTFT delta is reported, not gated (at fcfs
+        # admission the ordering only reshuffles within-tick budget)
+        "chunk_order_only_mean_ttft_delta_pct":
+            100.0 * (1.0 - ck["mean_ttft"] / max(cf["mean_ttft"], 1e-9)),
+        "chunk_order_only_throughput_ok":
+            ck["throughput"] >= 0.97 * cf["throughput"],
+        "chunking_throughput_not_worse":
+            cf["throughput"] >= atomic["throughput"],
+        "replay_under_90s": all(r["seconds"] < 90.0 for r in rows),
+    }
+
+
+# ---------------------------------------------------------------------------
 # online adaptation: static vs conformal vs conformal+refresh, under drift
 # ---------------------------------------------------------------------------
 
@@ -779,8 +894,11 @@ def _write_stamp(path, tables, **meta):
     """Stamp bench rows + validation checks to ``path`` (JSON). The file is
     the start of the serving perf trajectory: each entry is one table's raw
     rows and its ``validate_*`` booleans/metrics, keyed by table name, plus
-    the run metadata needed to reproduce it."""
+    the run metadata needed to reproduce it. Tables already stamped in an
+    existing file are preserved, so a ``--X-only`` run refreshes one table
+    without dropping the rest of the trajectory."""
     import json
+    import os
 
     def scrub(x):
         if isinstance(x, dict):
@@ -795,17 +913,25 @@ def _write_stamp(path, tables, **meta):
             return bool(x)
         return x
 
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f).get("tables", {})
+        except (ValueError, OSError):
+            merged = {}
+    merged.update(scrub(tables))
     with open(path, "w") as f:
-        json.dump(scrub({"meta": meta, "tables": tables}), f, indent=1,
+        json.dump({"meta": scrub(meta), "tables": merged}, f, indent=1,
                   sort_keys=True)
-    print(f"stamped {len(tables)} table(s) -> {path}")
+    print(f"stamped {len(tables)} table(s) ({len(merged)} total) -> {path}")
 
 
 def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
-         preemption_only=False, prefix_only=False, n_requests=50_000,
-         n_replicas=4, max_slots=32, pattern="bursty", seed=0, hetero=True,
-         predictors=True, adaptation=True, preemption=True, prefix=True,
-         stamp=None):
+         preemption_only=False, prefix_only=False, chunked_only=False,
+         n_requests=50_000, n_replicas=4, max_slots=32, pattern="bursty",
+         seed=0, hetero=True, predictors=True, adaptation=True,
+         preemption=True, prefix=True, chunked=True, stamp=None):
     tables = {}
 
     def finish(name, rows, checks):
@@ -815,6 +941,23 @@ def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
                          n_replicas=n_replicas, max_slots=max_slots,
                          pattern=pattern, seed=seed)
 
+    if chunked_only:
+        crows = run_cluster_chunked(n_requests=n_requests,
+                                    n_replicas=n_replicas, seed=seed)
+        checks = validate_cluster_chunked(crows)
+        print("chunked checks:", checks)
+        finish("cluster_chunked", crows, checks)
+        # CI smoke mode is a regression gate: hard-fail on the acceptance
+        # booleans so a chunked-prefill/TTFT regression turns the nightly
+        # job red
+        hard = ("all_accounted", "prod_chunked_beats_fcfs_atomic_p99_ttft",
+                "prod_beats_fcfs_chunked_mean_ttft", "throughput_equal",
+                "chunk_order_only_throughput_ok",
+                "chunking_throughput_not_worse", "replay_under_90s")
+        bad = [k for k in hard if not checks.get(k, False)]
+        if bad:
+            raise SystemExit(f"chunked acceptance failed: {bad}")
+        return crows
     if prefix_only:
         prows = run_cluster_prefix(n_requests=n_requests,
                                    n_replicas=n_replicas, seed=seed)
@@ -913,6 +1056,12 @@ def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
         checks = validate_cluster_prefix(frows)
         print("prefix checks:", checks)
         finish("cluster_prefix", frows, checks)
+    if chunked and (cluster or cluster_only):
+        krows = run_cluster_chunked(n_requests=n_requests,
+                                    n_replicas=n_replicas, seed=seed)
+        checks = validate_cluster_chunked(krows)
+        print("chunked checks:", checks)
+        finish("cluster_chunked", krows, checks)
     return rows
 
 
@@ -929,6 +1078,9 @@ if __name__ == "__main__":
     ap.add_argument("--prefix-only", action="store_true",
                     help="run only the prefix-sharing/affinity table "
                          "(CI smoke)")
+    ap.add_argument("--chunked-only", action="store_true",
+                    help="run only the chunked-prefill TTFT-vs-throughput "
+                         "table (CI smoke)")
     ap.add_argument("--stamp", metavar="PATH", default=None,
                     help="write rows + validation checks of every table run "
                          "to PATH as JSON (e.g. BENCH_serving.json)")
@@ -942,6 +1094,8 @@ if __name__ == "__main__":
                     help="skip the recompute-vs-keep preemption table")
     ap.add_argument("--no-prefix", action="store_true",
                     help="skip the prefix-sharing/affinity table")
+    ap.add_argument("--no-chunked", action="store_true",
+                    help="skip the chunked-prefill TTFT table")
     ap.add_argument("--n-requests", type=int, default=50_000)
     ap.add_argument("--n-replicas", type=int, default=4)
     ap.add_argument("--max-slots", type=int, default=32)
@@ -951,9 +1105,10 @@ if __name__ == "__main__":
     args = ap.parse_args()
     main(cluster_only=args.cluster_only, adaptation_only=args.adaptation_only,
          preemption_only=args.preemption_only, prefix_only=args.prefix_only,
-         n_requests=args.n_requests, n_replicas=args.n_replicas,
-         max_slots=args.max_slots, pattern=args.pattern, seed=args.seed,
-         hetero=not args.no_hetero, predictors=not args.no_predictors,
+         chunked_only=args.chunked_only, n_requests=args.n_requests,
+         n_replicas=args.n_replicas, max_slots=args.max_slots,
+         pattern=args.pattern, seed=args.seed, hetero=not args.no_hetero,
+         predictors=not args.no_predictors,
          adaptation=not args.no_adaptation,
          preemption=not args.no_preemption, prefix=not args.no_prefix,
-         stamp=args.stamp)
+         chunked=not args.no_chunked, stamp=args.stamp)

@@ -350,8 +350,16 @@ class AdmissionController:
         # service-time estimate stays in raw tokens, so admission does not
         # over-reject short requests as pages grow
         decode = float(np.ceil(work / spec.speed))
-        pts = spec.prefill_tokens_per_step
-        prefill = float(-(-int(req.prompt_len) // pts)) if pts > 0 else 0.0
+        if spec.step_token_budget is not None:
+            # chunked-prefill cost model: the prompt is consumed in chunks of
+            # prefill_chunk_tokens (whole budget when atomic) drawn from the
+            # per-step token budget, so prefill latency is ceil(prompt/chunk)
+            ce = min(spec.prefill_chunk_tokens or spec.step_token_budget,
+                     spec.step_token_budget)
+            prefill = float(-(-int(req.prompt_len) // ce))
+        else:
+            pts = spec.prefill_tokens_per_step
+            prefill = float(-(-int(req.prompt_len) // pts)) if pts > 0 else 0.0
         wait = engine.predicted_backlog() / spec.service_rate
         eta = now + self.slack * (wait + prefill + decode)
         return eta <= float(req.deadline)

@@ -62,7 +62,7 @@ from typing import List, Sequence
 import numpy as np
 
 from repro.serving.engine import (ReplicaSpec, SimEngine, _goodput,
-                                  _latency_stats)
+                                  _latency_stats, _ttft_stats)
 from repro.serving.request import Request
 from repro.serving.scheduler import Policy, annotate_predictions
 
@@ -109,6 +109,12 @@ class ClusterStats:
     prefill_ticks: int = 0         # prefill ticks actually paid
     prefill_saved_ticks: int = 0   # prefill ticks erased by prefix hits
     shared_peak: int = 0           # Σ per-replica peak shared tokens
+    # time-to-first-token percentiles over all completed requests (inf when
+    # none emitted; see ServeStats)
+    mean_ttft: float = float("inf")
+    p50_ttft: float = float("inf")
+    p90_ttft: float = float("inf")
+    p99_ttft: float = float("inf")
     replica_rows: List[dict] = field(default_factory=list)
 
     def row(self) -> dict:
@@ -290,8 +296,11 @@ class Cluster:
         k = int((qd * rt - qt * rd) / (rd + rt))
         if k <= 0:
             return
+        # the fit filter must round needs to the THIEF's page granularity:
+        # its page-rounded grant is what has to fit its pool, not raw tokens
         moved = d_eng.steal_queued(k, mode=self.steal,
-                                   fit=self.specs[thief].kv_budget)
+                                   fit=self.specs[thief].kv_budget,
+                                   fit_page_size=self.specs[thief].page_size)
         for r in moved:
             r.replica = thief
             # pages moved: a keep-mode holder carries its kept prompt+progress
@@ -477,4 +486,5 @@ class Cluster:
             shared_peak=sum(e.kv.shared_peak for e in self.engines),
             replica_rows=[e.stats().row() for e in self.engines],
             **_latency_stats(done),
+            **_ttft_stats(done),
         )

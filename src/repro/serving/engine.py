@@ -63,6 +63,18 @@ class ReplicaSpec:
         (``Request.prefix_id``/``prefix_len``) with ref-counted shared KV
         pages + copy-on-write instead of private copies, and skip their
         prefill. Off (the default) is bit-identical to a non-sharing pool.
+    step_token_budget : vLLM-style per-step token budget — the total tokens
+        (prefill chunk tokens + decode tokens) one engine tick may process.
+        Prefilling slots consume their prompt in chunks drawn from this
+        budget, interleaved with decode: decode slots emit fewer tokens on
+        ticks where prefill spends the budget (``Policy.chunk_order`` picks
+        which prefilling slot feeds first). ``None`` (the default) keeps the
+        tick-based ``prefill_tokens_per_step`` model bit-identically.
+    prefill_chunk_tokens : budget mode only — cap on the prefill tokens one
+        slot may draw from the budget per tick. 0 means *atomic* prefill
+        under the budget: a tick with any prefilling slot dedicates the
+        whole budget to prefill (decode pauses), the non-chunked serving
+        model chunked prefill exists to beat.
     """
     max_slots: int
     kv_budget: int
@@ -70,6 +82,8 @@ class ReplicaSpec:
     prefill_tokens_per_step: int = 0
     page_size: int = 1
     share_prefixes: bool = False
+    step_token_budget: Optional[int] = None
+    prefill_chunk_tokens: int = 0
 
     def __post_init__(self):
         if self.max_slots <= 0 or self.kv_budget <= 0:
@@ -82,6 +96,19 @@ class ReplicaSpec:
             raise ValueError("page_size must be >= 1")
         if self.kv_budget % self.page_size:
             raise ValueError("kv_budget must be a multiple of page_size")
+        if self.step_token_budget is not None:
+            if self.step_token_budget < 1:
+                raise ValueError("step_token_budget must be >= 1")
+            if self.prefill_tokens_per_step:
+                raise ValueError(
+                    "step_token_budget and prefill_tokens_per_step are "
+                    "mutually exclusive prefill cost models")
+        if self.prefill_chunk_tokens < 0:
+            raise ValueError("prefill_chunk_tokens must be >= 0")
+        if self.prefill_chunk_tokens and self.step_token_budget is None:
+            raise ValueError(
+                "prefill_chunk_tokens needs step_token_budget (chunked "
+                "prefill is a budget-mode knob)")
 
     @property
     def service_rate(self) -> float:
@@ -128,6 +155,12 @@ class ServeStats:
     shared_peak: int = 0           # peak tokens in live shared pages
     prefill_ticks: int = 0         # prefill ticks actually paid
     prefill_saved_ticks: int = 0   # prefill ticks erased by prefix hits
+    # time-to-first-token percentiles (t_first_token − arrival, over
+    # completed requests that emitted at least one token; inf when none did)
+    mean_ttft: float = float("inf")
+    p50_ttft: float = float("inf")
+    p90_ttft: float = float("inf")
+    p99_ttft: float = float("inf")
 
     def row(self) -> dict:
         return self.__dict__.copy()
@@ -146,6 +179,22 @@ def _latency_stats(done: List[Request]) -> dict:
         p90_latency=float(np.quantile(lat, 0.9)),
         p99_latency=float(np.quantile(lat, 0.99)),
         mean_wait=float(waits.mean()),
+    )
+
+
+def _ttft_stats(done: List[Request]) -> dict:
+    """Time-to-first-token percentiles over completed requests. Degenerate
+    zero-length requests never emit, so they carry no TTFT sample."""
+    ttft = np.array([r.t_first_token - r.arrival for r in done
+                     if r.t_first_token is not None])
+    if len(ttft) == 0:
+        inf = float("inf")
+        return dict(mean_ttft=inf, p50_ttft=inf, p90_ttft=inf, p99_ttft=inf)
+    return dict(
+        mean_ttft=float(ttft.mean()),
+        p50_ttft=float(np.quantile(ttft, 0.5)),
+        p90_ttft=float(np.quantile(ttft, 0.9)),
+        p99_ttft=float(np.quantile(ttft, 0.99)),
     )
 
 
@@ -205,6 +254,15 @@ class SimEngine:
         self.predictor = predictor
         self.vectorized = vectorized
         self._kv_budget = spec.kv_budget
+        # step-token-budget mode: None keeps every legacy path bit-identical
+        self._budget = spec.step_token_budget
+        # effective per-slot prefill chunk: the explicit cap, else the whole
+        # budget; _atomic marks the non-chunked model (prefill ticks dedicate
+        # the entire budget to prefill and decode pauses)
+        self._chunk = min(spec.prefill_chunk_tokens or (spec.step_token_budget
+                                                        or 0),
+                          spec.step_token_budget or 0)
+        self._atomic = spec.prefill_chunk_tokens == 0
         self.reset()
 
     # -- lifecycle -----------------------------------------------------------
@@ -244,6 +302,8 @@ class SimEngine:
         self._a_plen = np.zeros(m, np.int64)
         self._a_tlen = np.zeros(m, np.int64)
         self._a_pref = np.zeros(m, np.int64)    # remaining prefill ticks
+        self._a_pftok = np.zeros(m, np.int64)   # remaining prefill tokens
+        #                                         (step_token_budget mode)
         self._a_pred = np.zeros(m, np.float64)
         self._a_shared = np.zeros(m, np.int64)  # grant tokens on shared pages
         # Σ physical used tokens of active slots: each slot's (used − shared)
@@ -256,7 +316,10 @@ class SimEngine:
     # -- queue ---------------------------------------------------------------
 
     def _order_key(self, r: Request) -> float:
-        return order_key(r, self.policy.order)
+        # max_cap lets quantile_remaining spot an uninformative reserve="max"
+        # reservation and fall through to the point prediction
+        return order_key(r, self.policy.order,
+                         max_cap=float(self.policy.max_seq_len))
 
     @staticmethod
     def _queue_need(r: Request) -> int:
@@ -342,7 +405,8 @@ class SimEngine:
     # -- work stealing (cluster rebalance) -----------------------------------
 
     def steal_queued(self, k: int, mode: str = "tail",
-                     fit: Optional[int] = None) -> List[Request]:
+                     fit: Optional[int] = None,
+                     fit_page_size: int = 1) -> List[Request]:
         """Remove up to ``k`` queued (ready, never active) requests so the
         cluster can migrate them to a less-loaded replica.
 
@@ -355,22 +419,33 @@ class SimEngine:
         fits that budget (the thief's KV pool) — a keep-mode holder's kept
         pages migrate with it and are re-reserved out of the thief's pool,
         so its delta need alone would understate feasibility and strand an
-        oversized request on a small replica (dropped on arrival).
+        oversized request on a small replica (dropped on arrival). The need
+        is rounded up to whole pages of ``fit_page_size`` — the *thief's*
+        page granularity, which can be coarser than the donor's: comparing
+        raw tokens would pass a request whose page-rounded grant exceeds
+        the thief's pool, only for the thief to drop it on arrival.
         """
         if k <= 0 or not self._ready:
             return []
         if mode == "quantile":
+            cap = float(self.policy.max_seq_len)
+
             def keyf(e):
-                return (quantile_remaining(e[2]), e[1])
+                return (quantile_remaining(e[2], max_cap=cap), e[1])
         else:   # 'tail': largest policy key = served last
             keyf = None
         idx = sorted(range(len(self._ready)),
                      key=(lambda i: keyf(self._ready[i])) if keyf
                      else self._ready.__getitem__)
         if fit is not None:
+            ps = max(1, int(fit_page_size))
+
+            def rounded_need(r):
+                need = int(r.prompt_len + r.reserve_len)
+                return -(-need // ps) * ps   # thief's page-rounded grant
+
             idx = [i for i in idx
-                   if int(self._ready[i][2].prompt_len
-                          + self._ready[i][2].reserve_len) <= fit]
+                   if rounded_need(self._ready[i][2]) <= fit]
         chosen = idx[len(idx) - min(k, len(idx)):]   # largest keys last
         if not chosen:
             return []
@@ -446,6 +521,26 @@ class SimEngine:
         self.prefill_saved_ticks += full - ticks
         return ticks
 
+    def _prefill_tokens(self, r: Request) -> int:
+        """Budget-mode admission cost: prompt tokens the slot must pull from
+        the step token budget before its first decode token — prompt plus
+        recompute progress, minus the shared-prefix skip; a keep-mode holder
+        resumes free. The tick-based counters keep their meaning in chunk
+        units: ``recompute_ticks``/``prefill_saved_ticks`` are estimated at
+        the effective chunk rate here, ``prefill_ticks`` counts the slot-
+        ticks the budgeted tick actually spends (call after the KV
+        reservation — the skip is recorded at admit)."""
+        if r.held > 0:
+            return 0
+        work = int(r.prompt_len + r.generated)
+        skip = min(self.kv.prefill_skip(r.rid), int(r.prompt_len))
+        toks = max(work - skip, 0)
+        ce = max(self._chunk, 1)
+        if r.generated > 0:
+            self.recompute_ticks += -(-toks // ce)
+        self.prefill_saved_ticks += -(-work // ce) - (-(-toks // ce))
+        return toks
+
     def _expire_ready_head(self):
         """Drop ready-queue heads that can never start here: reservation need
         larger than this replica's entire KV pool (``dropped`` — reachable on
@@ -460,7 +555,10 @@ class SimEngine:
         while self._ready:
             r = self._ready[0][2]
             need = int(r.prompt_len + r.reserve_len)
-            if self.kv.pages_for(need) > self.kv.pages_total:
+            # sharing-aware servability: a raw pages_for(need) > pages_total
+            # test would wrongly drop a session follow-up whose resident
+            # shared prefix (or kept pages) already covers part of its need
+            if not self.kv.servable(r.rid, need, *self._prefix_args(r)):
                 self._pop_ready()
                 self._drop_held(r)
                 self.dropped += 1
@@ -540,7 +638,12 @@ class SimEngine:
             self._a_res[i] = self.kv.reserved[cand.rid]  # page-rounded grant
             self._a_plen[i] = cand.prompt_len
             self._a_tlen[i] = cand.true_len
-            self._a_pref[i] = self._prefill_ticks(cand)
+            if self._budget is None:
+                self._a_pref[i] = self._prefill_ticks(cand)
+                self._a_pftok[i] = 0
+            else:
+                self._a_pref[i] = 0
+                self._a_pftok[i] = self._prefill_tokens(cand)
             self._a_pred[i] = (cand.predicted_len
                                if cand.predicted_len is not None
                                else float(cand.true_len))
@@ -565,7 +668,8 @@ class SimEngine:
         if rem[v] > self.policy.preempt_factor * predicted_remaining(newcomer):
             victim = self._slots[v]
             victim.generated = int(self._a_gen[v])
-            if self.policy.preempt_mode == "keep" and self._a_pref[v] == 0:
+            if (self.policy.preempt_mode == "keep" and self._a_pref[v] == 0
+                    and self._a_pftok[v] == 0):
                 # keep-pages: shrink to the filled pages and hold them, so
                 # resume reserves only the delta and skips the prefill
                 # recompute. A victim still prefilling has nothing finished
@@ -585,7 +689,8 @@ class SimEngine:
         n = self._n_active
         self._slots.pop(i)
         for a in (self._a_gen, self._a_used, self._a_res, self._a_plen,
-                  self._a_tlen, self._a_pref, self._a_pred, self._a_shared):
+                  self._a_tlen, self._a_pref, self._a_pftok, self._a_pred,
+                  self._a_shared):
             a[i:n - 1] = a[i + 1:n]
         self._n_active = n - 1
 
@@ -637,6 +742,8 @@ class SimEngine:
             if emit <= 0:
                 i += 1
                 continue  # stalled on the reservation, retries next tick
+            if r.t_first_token is None:
+                r.t_first_token = self.t
             self._a_gen[i] += emit
             self._a_used[i] += emit
             self._used_sum += emit
@@ -694,8 +801,20 @@ class SimEngine:
                         np.minimum(sp, self._a_tlen[:n] - self._a_gen[:n]))
         if bool(np.any(self._a_plen[:n] + self._a_gen[:n] + emit
                        > self._a_res[:n])):
-            self._decode_tick_ref()
+            # budget mode reaches here only on unconstrained ticks, where the
+            # budgeted reference tick and the plain one agree — but route
+            # through the budgeted one so the two paths share one code path
+            if self._budget is None:
+                self._decode_tick_ref()
+            else:
+                self._decode_tick_budget()
             return
+        first = (self._a_gen[:n] == 0) & (emit > 0)
+        if bool(first.any()):
+            for i in np.nonzero(first)[0]:
+                r = self._slots[int(i)]
+                if r.t_first_token is None:
+                    r.t_first_token = self.t
         self._progress = True
         self._a_pref[:n] -= pref
         self._a_gen[:n] += emit
@@ -706,6 +825,112 @@ class SimEngine:
             for off, i in enumerate(np.nonzero(finished)[0]):
                 self._finish_slot(int(i) - off)
 
+    def _decode_tick_budget(self):
+        """One budgeted tick (``step_token_budget`` engines): prefill chunks
+        and decode tokens draw from one shared token budget.
+
+        1. *prefill*: each prefilling slot pulls up to ``prefill_chunk_tokens``
+           of its remaining prompt from the budget, in ``Policy.chunk_order``
+           (``fcfs`` = slot admission order, ``prod`` = predicted-short first,
+           earliest deadline breaking ties). With ``prefill_chunk_tokens=0``
+           (*atomic*) a prefill tick dedicates the whole budget to prefill
+           and decode pauses — the non-chunked model.
+        2. *decode*: the leftover budget feeds decoding slots in admission
+           order, each emitting up to ``speed`` tokens; later slots emit
+           less (or nothing) on ticks where prefill spent the budget. The
+           reservation-growth/stall semantics mirror the reference loop.
+
+        A slot whose last prefill chunk lands this tick emits its first
+        token next tick, matching the tick-based prefill model. This is the
+        *reference* semantics for budget mode; the vectorized path uses it
+        verbatim on constrained ticks, so both paths stay bit-identical.
+        """
+        self._progress = False
+        n = self._n_active
+        if n == 0:
+            return
+        sp = self.spec.speed
+        left = int(self._budget)
+        pf = [i for i in range(n) if self._a_pftok[i] > 0]
+        if pf:
+            if self.policy.chunk_order == "prod":
+                def chunk_key(j):
+                    r = self._slots[j]
+                    dl = float(r.deadline) if r.deadline is not None \
+                        else float("inf")
+                    return (float(self._a_pred[j]), dl, j)
+                pf.sort(key=chunk_key)
+            cap = left if self._atomic else self._chunk
+            for j in pf:
+                if left <= 0:
+                    break
+                take = min(cap, int(self._a_pftok[j]), left)
+                if take <= 0:
+                    continue
+                self._a_pftok[j] -= take
+                left -= take
+                self.prefill_ticks += 1
+                self._progress = True
+            if self._atomic:
+                left = 0    # non-chunked: a prefill tick pauses decode
+        was_pref = {self._slots[j].rid for j in pf}
+        i = 0
+        while i < self._n_active:
+            r = self._slots[i]
+            if r.rid in was_pref:
+                i += 1      # still prefilling (or finished its prompt this
+                continue    # tick): first decode token comes next tick
+            emit = min(sp, int(self._a_tlen[i] - self._a_gen[i]))
+            if emit <= 0:
+                # degenerate zero-remaining request: finishes without
+                # emitting (and without charging the budget)
+                self._progress = True
+                self._finish_slot(i)
+                continue
+            emit = min(emit, left)
+            if emit <= 0:
+                i += 1      # budget spent upstream — not a memory stall,
+                continue    # this tick already made progress elsewhere
+            res = int(self._a_res[i])
+            head = res - int(self._a_plen[i] + self._a_gen[i])
+            if emit > head:
+                if self.kv.grow(r.rid, max(int(0.25 * res), 16, sp)):
+                    self._a_res[i] = self.kv.reserved[r.rid]
+                    r.overflows += 1
+                    head = int(self._a_res[i]) \
+                        - int(self._a_plen[i] + self._a_gen[i])
+                if emit > head:
+                    emit = head     # partial; 0 == stalled this tick
+            if emit <= 0:
+                i += 1
+                continue
+            if r.t_first_token is None:
+                r.t_first_token = self.t
+            self._a_gen[i] += emit
+            self._a_used[i] += emit
+            self._used_sum += emit
+            left -= emit
+            self._progress = True
+            if self._a_gen[i] >= self._a_tlen[i]:
+                self._finish_slot(i)
+            else:
+                i += 1
+        if self._n_active and not self._progress:
+            self._evict_stalled()
+
+    def _budget_constrained(self) -> bool:
+        """Is the *next* tick one the shared token budget can shape? True
+        when any slot is prefilling (chunks interleave with decode) or the
+        decoding slots' full demand exceeds the budget. Unconstrained ticks
+        are plain fixed-speed decode — leapable with the legacy arithmetic.
+        """
+        n = self._n_active
+        if n == 0:
+            return False
+        if bool((self._a_pftok[:n] > 0).any()):
+            return True
+        return n * self.spec.speed > self._budget
+
     def step(self):
         """One engine tick: admit → (preempt) → decode one token per slot."""
         if (self._n_active == 0 and not self._ready
@@ -715,7 +940,16 @@ class SimEngine:
         self._admit()
         self._maybe_preempt()
         self.t += 1.0
-        if self.vectorized:
+        if self._budget is not None:
+            # budgeted engines: constrained ticks run the budgeted reference
+            # tick (inherently sequential allocation); unconstrained ticks
+            # are plain fixed-speed decode, so the vectorized fast path
+            # applies unchanged and stays bit-identical
+            if self.vectorized and not self._budget_constrained():
+                self._decode_tick_vec()
+            else:
+                self._decode_tick_budget()
+        elif self.vectorized:
             self._decode_tick_vec()
         else:
             self._decode_tick_ref()
@@ -751,7 +985,8 @@ class SimEngine:
         if self._ready:
             cand = self._ready[0][2]
             need = int(cand.prompt_len + cand.reserve_len)
-            if self.kv.pages_for(need) > self.kv.pages_total:
+            # mirror of _expire_ready_head's sharing-aware servability check
+            if not self.kv.servable(cand.rid, need, *self._prefix_args(cand)):
                 return 1.0   # unservable-head drop fires next tick
             if self._n_active < self.max_slots and (
                     self.kv.can_reserve(cand.rid, need,
@@ -770,6 +1005,12 @@ class SimEngine:
                         * predicted_remaining(cand)):
                     return 1.0   # preemption fires next tick (monotone ↓)
         n = self._n_active
+        if n and self._budget is not None and self._budget_constrained():
+            # budget-shaped tick (prefill chunks in flight, or decode demand
+            # over the budget): allocation is sequential and stateful, so
+            # every such tick is evented; leaps only span unconstrained
+            # pure-decode stretches where the legacy arithmetic is exact
+            return 1.0
         if n:
             pref = self._a_pref[:n]
             prefilling = pref > 0
@@ -796,6 +1037,14 @@ class SimEngine:
         if n:
             add = np.where(self._a_pref[:n] > 0, 0, self.spec.speed)
             self._a_pref[:n] -= np.minimum(self._a_pref[:n], q)
+            first = (self._a_gen[:n] == 0) & (add > 0)
+            if bool(first.any()):
+                # a decoding slot entering the leap with no output emits its
+                # first token on the span's first tick
+                for i in np.nonzero(first)[0]:
+                    r = self._slots[int(i)]
+                    if r.t_first_token is None:
+                        r.t_first_token = self.t + 1.0
             gain = add * q
             self._a_gen[:n] += gain
             self._a_used[:n] += gain
@@ -872,6 +1121,7 @@ class SimEngine:
             prefill_ticks=self.prefill_ticks,
             prefill_saved_ticks=self.prefill_saved_ticks,
             **_latency_stats(self._done),
+            **_ttft_stats(self._done),
         )
 
 

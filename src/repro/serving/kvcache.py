@@ -237,6 +237,26 @@ class KVCacheManager:
         need, excl = self._admit_need(n_tokens, prefix_id, prefix_len)
         return need <= self._avail_pages(excl)
 
+    def servable(self, rid: int, n_tokens: int,
+                 prefix_id: Optional[str] = None, prefix_len: int = 0) -> bool:
+        """Sharing-aware "could this request *ever* start here": the pages it
+        would still have to allocate, against the whole pool. Unlike the raw
+        ``pages_for(n_tokens) <= pages_total`` test, this routes through the
+        same :meth:`_admit_need` arithmetic admission uses, so a session
+        follow-up whose full need exceeds a small replica's pool but whose
+        resident shared prefix already covers part of it is *not* declared
+        unservable — the resident prefix pages are capacity the request does
+        not need to find again. A keep-mode holder's kept pages likewise
+        count toward its own need (only the delta pages must still fit).
+        Retained (refs==0) cache never caps servability: it is reclaimable
+        the moment an allocation wants the pages."""
+        if rid in self.reserved:            # holder: delta on the kept pages
+            want = max(int(n_tokens), self.asked[rid])
+            return self.pages_for(want) - self.pages_of(rid) \
+                <= self.pages_total
+        need, _ = self._admit_need(n_tokens, prefix_id, prefix_len)
+        return need <= self.pages_total
+
     def admit(self, rid: int, n_tokens: int, prefix_id: Optional[str] = None,
               prefix_len: int = 0) -> bool:
         if not self._sharing(prefix_id, prefix_len):

@@ -111,15 +111,37 @@ class PredictorService:
         ``Request.pred_probs`` (float32, K bins).
     impl : kernel dispatch for the fused head — ``"auto"`` (Pallas on TPU,
         XLA elsewhere), ``"pallas"``, ``"interpret"``, or ``"xla"``.
+    step_token_budget, prefill_chunk_tokens : the serving engine's
+        chunked-prefill knobs (see
+        :class:`~repro.serving.engine.ReplicaSpec`). When a budget is given,
+        dispatch-time scoring rides the chunked batch-prefill: one engine
+        step starts at most ``budget // chunk`` prompts' first chunks, so a
+        fused inference batch larger than that never forms. The effective
+        ``max_batch`` is capped at that lane count (power-of-two rounded,
+        floor 8 to match the pad buckets). Annotation *results* are
+        unchanged — prediction is deterministic in the features — only
+        batching shape and :class:`ServiceStats` move.
     """
 
     def __init__(self, predictor, window: float = 16.0, max_batch: int = 512,
                  cache_size: int = 8192, work_quantile: float = 0.9,
-                 attach_hist: bool = True, impl: str = "auto"):
+                 attach_hist: bool = True, impl: str = "auto",
+                 step_token_budget: Optional[int] = None,
+                 prefill_chunk_tokens: int = 0):
         if window <= 0:
             raise ValueError("window must be positive")
         if max_batch <= 0:
             raise ValueError("max_batch must be positive")
+        if step_token_budget is not None:
+            if step_token_budget < 1:
+                raise ValueError("step_token_budget must be >= 1")
+            ce = min(prefill_chunk_tokens or step_token_budget,
+                     step_token_budget)
+            lanes = max(1, int(step_token_budget) // max(int(ce), 1))
+            max_batch = min(int(max_batch),
+                            max(8, 1 << (lanes - 1).bit_length()))
+        self.step_token_budget = step_token_budget
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         self.predictor = predictor
         self.window = float(window)
         self.max_batch = int(max_batch)

@@ -42,6 +42,9 @@ class Request:
     # engine bookkeeping
     t_start: Optional[float] = None
     t_finish: Optional[float] = None
+    # tick that emitted this request's first decode token (the TTFT anchor);
+    # set once — a preempted request that resumes keeps its original value
+    t_first_token: Optional[float] = None
     generated: int = 0
     overflows: int = 0
     # keep-mode preemption: tokens of KV pages this (queued) request still
@@ -53,6 +56,12 @@ class Request:
     @property
     def wait(self) -> float:
         return (self.t_start - self.arrival) if self.t_start is not None else np.inf
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (inf until one is emitted)."""
+        return (self.t_first_token - self.arrival) \
+            if self.t_first_token is not None else np.inf
 
     @property
     def latency(self) -> float:
@@ -72,8 +81,8 @@ class Request:
         the engine. This replaces the brittle ``Request(**r.__dict__)``
         pattern, which silently breaks on non-init fields."""
         return dataclasses.replace(self, replica=None, t_start=None,
-                                   t_finish=None, generated=0, overflows=0,
-                                   held=0)
+                                   t_finish=None, t_first_token=None,
+                                   generated=0, overflows=0, held=0)
 
 
 def workload_from_scenario(

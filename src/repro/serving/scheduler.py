@@ -36,6 +36,9 @@ from repro.serving.request import Request
 ORDERINGS = ("fcfs", "sjf_pred", "sjf_oracle", "srtf_pred", "edf", "laxity")
 RESERVES = ("max", "predicted", "quantile", "oracle")
 PREEMPT_MODES = ("recompute", "keep")
+# chunked-prefill budget allocation (ReplicaSpec.step_token_budget engines):
+# which prefilling slot gets the next chunk of the per-step token budget
+CHUNK_ORDERS = ("fcfs", "prod")
 
 
 @dataclass(frozen=True)
@@ -58,6 +61,13 @@ class Policy:
         re-reserves — and re-prefills — from scratch; ``"keep"`` retains the
         pages the victim already filled (paged KV), so resume reserves only
         the delta pages and skips the prefill recompute.
+    chunk_order : chunked-prefill only (engines with a
+        ``ReplicaSpec.step_token_budget``), one of :data:`CHUNK_ORDERS` —
+        which prefilling slot the per-step token budget feeds first.
+        ``"fcfs"`` hands chunks out in slot admission order; ``"prod"`` is
+        the ProD-aware allocation: predicted-short requests first (earliest
+        deadline breaking ties), so short answers reach their first token
+        before long ones monopolize the budget.
     """
 
     order: str = "fcfs"            # see ORDERINGS
@@ -68,11 +78,15 @@ class Policy:
     preempt: bool = False          # srtf: evict the longest-remaining active
     preempt_factor: float = 2.0    # only if its remaining > factor × newcomer's
     preempt_mode: str = "recompute"   # see PREEMPT_MODES
+    chunk_order: str = "fcfs"         # see CHUNK_ORDERS
 
     def __post_init__(self):
         if self.preempt_mode not in PREEMPT_MODES:
             raise ValueError(
                 f"preempt_mode {self.preempt_mode!r} not in {PREEMPT_MODES}")
+        if self.chunk_order not in CHUNK_ORDERS:
+            raise ValueError(
+                f"chunk_order {self.chunk_order!r} not in {CHUNK_ORDERS}")
 
 
 def predicted_remaining(r: Request) -> float:
@@ -81,16 +95,25 @@ def predicted_remaining(r: Request) -> float:
     return max(base - r.generated, 1.0)
 
 
-def quantile_remaining(r: Request) -> float:
+def quantile_remaining(r: Request, max_cap: Optional[float] = None) -> float:
     """Predicted q0.9 remaining work — the pessimistic remaining-tokens signal
     least-laxity ordering and quantile work stealing budget against.
 
-    Prefers the PredictorService-attached ``pred_q`` (true q0.9), falls back
-    to the reservation size (a quantile under ``reserve="quantile"``), then
-    to the point prediction."""
+    Fallback chain:
+
+    1. ``pred_q`` — the PredictorService-attached true q0.9;
+    2. ``reserve_len`` — but only when it carries per-request information
+       (a quantile/predicted/oracle reservation). When ``max_cap`` (the
+       policy's ``max_seq_len``) is given and the reservation sits at that
+       cap — ``reserve="max"`` reserves the cap for *every* request — the
+       reservation is a constant pseudo-quantile that would poison laxity
+       ordering and quantile stealing, so it is skipped;
+    3. the point prediction (``predicted_len``, else the realized length).
+    """
     if r.pred_q is not None:
         base = float(r.pred_q)
-    elif r.reserve_len is not None:
+    elif r.reserve_len is not None and not (
+            max_cap is not None and float(r.reserve_len) >= float(max_cap)):
         base = float(r.reserve_len)
     else:
         base = predicted_remaining(r) + r.generated
@@ -147,13 +170,17 @@ def annotate_predictions(requests: List[Request], predictor, policy: Policy):
         r.reserve_len = float(min(max(rv, 8.0), policy.max_seq_len))
 
 
-def order_key(r: Request, order: str) -> float:
+def order_key(r: Request, order: str,
+              max_cap: Optional[float] = None) -> float:
     """Static heap key realizing ``order`` (FIFO tie-break happens outside).
 
     EDF keys on the absolute deadline; least-laxity keys on
     ``deadline − q0.9-remaining`` (see module docstring for why the static
-    key is exact). Requests without a deadline key to +inf under both — they
-    run FIFO after every deadline-carrying request."""
+    key is exact). ``max_cap`` (the policy's ``max_seq_len``) lets
+    :func:`quantile_remaining` recognize an uninformative ``reserve="max"``
+    reservation and fall through to the point prediction. Requests without
+    a deadline key to +inf under both — they run FIFO after every
+    deadline-carrying request."""
     if order == "fcfs":
         return float(r.arrival)
     if order in ("sjf_pred", "srtf_pred"):
@@ -165,7 +192,7 @@ def order_key(r: Request, order: str) -> float:
     if order == "laxity":
         if r.deadline is None:
             return float("inf")
-        return float(r.deadline) - quantile_remaining(r)
+        return float(r.deadline) - quantile_remaining(r, max_cap=max_cap)
     raise ValueError(order)
 
 

@@ -1,0 +1,357 @@
+"""Chunked prefill under a per-step token budget, plus the PR's bugfix
+regressions: sharing-aware head servability, page-rounded steal fit, and the
+``reserve="max"`` quantile fallback.
+
+Covers the tentpole acceptance criteria directly:
+
+* vec-vs-ref bit-exactness of budgeted runs over a random sweep of budgets ×
+  chunk sizes × chunk orders × speeds × policies (property test);
+* ``step_token_budget=None`` bit-identity with pre-chunking golden rows
+  (engine + cluster), so the legacy paths provably did not move;
+* TTFT monotonicity — chunked prefill never worsens mean TTFT vs atomic
+  prefill at the same budget on a feasible trace;
+* chunk-aware admission ETA and predictor batch capping.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.serving.adaptation import AdmissionController
+from repro.serving.arrivals import LatentOracle, TraceConfig, make_trace
+from repro.serving.cluster import Cluster
+from repro.serving.engine import ReplicaSpec, SimEngine
+from repro.serving.predictor import PredictorService
+from repro.serving.request import Request
+from repro.serving.scheduler import Policy, quantile_remaining, order_key
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+def _trace(n=120, rate=1.0, seed=5, **kw):
+    kw.setdefault("max_seq_len", 512)
+    kw.setdefault("model", "llama")
+    kw.setdefault("scenario", "math")
+    kw.setdefault("slo_factor", 6.0)
+    kw.setdefault("slo_floor", 200.0)
+    return make_trace(TraceConfig(n_requests=n, rate=rate, seed=seed, **kw))
+
+
+def _run(spec, pol, reqs, vectorized=True):
+    eng = SimEngine(spec=spec, policy=pol, predictor=LatentOracle(),
+                    vectorized=vectorized)
+    return eng.run(reqs).row()
+
+
+TRACE = _trace()
+
+
+class TestKnobValidation:
+    def test_budget_and_pts_mutually_exclusive(self):
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            ReplicaSpec(4, 1024, prefill_tokens_per_step=32,
+                        step_token_budget=64)
+
+    def test_chunk_needs_budget(self):
+        with pytest.raises(ValueError, match="budget"):
+            ReplicaSpec(4, 1024, prefill_chunk_tokens=16)
+
+    def test_budget_positive(self):
+        with pytest.raises(ValueError):
+            ReplicaSpec(4, 1024, step_token_budget=0)
+
+    def test_chunk_order_validated(self):
+        with pytest.raises(ValueError, match="chunk_order"):
+            Policy("fcfs", chunk_order="lifo")
+        assert Policy("fcfs", chunk_order="prod").chunk_order == "prod"
+
+
+class TestGoldenBitIdentity:
+    """``step_token_budget=None`` must leave every legacy number untouched.
+
+    The expected values are the exact rows this configuration produced
+    BEFORE the chunked-prefill code existed (captured at the pre-change
+    commit). Equality is exact — no tolerance."""
+
+    ENGINE_GOLDEN = dict(
+        makespan=1324.0, mean_latency=475.0483021597908,
+        p50_latency=394.0754251350395, p90_latency=977.3657043236717,
+        p99_latency=1074.8043175058644, mean_wait=412.9751314280835,
+        throughput=14.694864048338369, kv_waste_ratio=0.3374401211442367,
+        overflow_events=15, peak_reserved=3056, completed=164, timed_out=86,
+        slo_violations=16, goodput=12.586858006042297, page_size=16,
+        occupancy=0.5426058581948641, frag_ratio=0.023384698199692244,
+        prefill_ticks=404,
+    )
+    CLUSTER_GOLDEN = dict(
+        makespan=1387.0, mean_latency=486.55343787097394, completed=191,
+        timed_out=59, stolen=22, steal_pages=407,
+        balance=1.6092216203005987, prefill_ticks=561,
+    )
+
+    POL = Policy("sjf_pred", "quantile", quantile=0.9, max_seq_len=512)
+    SPEC = ReplicaSpec(max_slots=8, kv_budget=4096, speed=2,
+                       prefill_tokens_per_step=64, page_size=16)
+
+    def _golden_trace(self):
+        return _trace(n=250, rate=1.2, seed=3)
+
+    def test_engine_row_unchanged(self):
+        row = _run(self.SPEC, self.POL, self._golden_trace())
+        for k, v in self.ENGINE_GOLDEN.items():
+            assert row[k] == v, (k, row[k], v)
+
+    def test_cluster_row_unchanged(self):
+        specs = (self.SPEC,
+                 ReplicaSpec(4, 2048, speed=1, prefill_tokens_per_step=32,
+                             page_size=8))
+        cl = Cluster(specs, self.POL, router="psq", predictor=LatentOracle(),
+                     rebalance_every=64, steal="quantile")
+        row = cl.run(self._golden_trace()).row()
+        for k, v in self.CLUSTER_GOLDEN.items():
+            assert row[k] == v, (k, row[k], v)
+
+
+class TestBudgetedVecRefExactness:
+    """The budgeted tick must be bit-exact between the vectorized path (which
+    drops to the reference budget tick on constrained ticks and leaps
+    unconstrained spans) and the pure per-slot reference loop."""
+
+    @given(st.integers(48, 256),            # step token budget
+           st.sampled_from([0, 16, 32, 64]),  # chunk (0 = atomic)
+           st.sampled_from(["fcfs", "prod"]),
+           st.sampled_from([1, 2, 4]),      # speed
+           st.sampled_from(["fcfs", "sjf_pred", "edf", "laxity"]))
+    def test_vec_matches_ref(self, budget, chunk, corder, speed, order):
+        pol = Policy(order, "quantile", quantile=0.9, max_seq_len=512,
+                     chunk_order=corder)
+        spec = ReplicaSpec(max_slots=8, kv_budget=4096, speed=speed,
+                           step_token_budget=budget,
+                           prefill_chunk_tokens=chunk, page_size=16)
+        a = _run(spec, pol, TRACE, vectorized=True)
+        b = _run(spec, pol, TRACE, vectorized=False)
+        assert a == b
+
+    def test_vec_matches_ref_with_sharing(self):
+        reqs = _trace(n=100, seed=9, session_frac=0.6, system_prompt_len=64)
+        pol = Policy("fcfs", "quantile", quantile=0.9, max_seq_len=512,
+                     chunk_order="prod")
+        spec = ReplicaSpec(max_slots=8, kv_budget=4096, speed=2,
+                           step_token_budget=96, prefill_chunk_tokens=32,
+                           page_size=16, share_prefixes=True)
+        assert _run(spec, pol, reqs, True) == _run(spec, pol, reqs, False)
+
+
+class TestTTFT:
+    def test_ttft_monotone_chunked_vs_atomic(self):
+        """At the same step budget, chunked prefill (decode keeps flowing
+        while prompts stream in) must not worsen mean TTFT vs atomic
+        prefill (whole budget stalls on each prompt)."""
+        pol = Policy("sjf_pred", "quantile", quantile=0.9, max_seq_len=512)
+        rows = {}
+        for chunk in (0, 32, 64):
+            spec = ReplicaSpec(max_slots=8, kv_budget=4096, speed=2,
+                               step_token_budget=128,
+                               prefill_chunk_tokens=chunk, page_size=16)
+            rows[chunk] = _run(spec, pol, TRACE)
+        assert rows[32]["mean_ttft"] <= rows[0]["mean_ttft"]
+        assert rows[64]["mean_ttft"] <= rows[0]["mean_ttft"]
+
+    def test_ttft_fields_populated(self):
+        pol = Policy("fcfs", "quantile", quantile=0.9, max_seq_len=512)
+        spec = ReplicaSpec(max_slots=8, kv_budget=4096, speed=2,
+                           step_token_budget=128, prefill_chunk_tokens=32,
+                           page_size=16)
+        row = _run(spec, pol, TRACE)
+        assert np.isfinite(row["mean_ttft"])
+        assert row["mean_ttft"] <= row["p50_ttft"] * 10  # sane scale
+        assert row["p50_ttft"] <= row["p90_ttft"] <= row["p99_ttft"]
+        # TTFT can never exceed full latency on the same population
+        assert row["mean_ttft"] <= row["mean_latency"]
+
+    def test_ttft_in_legacy_mode_and_cluster(self):
+        """TTFT is recorded on the legacy (non-budget) paths too — tick,
+        vectorized, and leap — and aggregated by the cluster."""
+        pol = Policy("fcfs", "quantile", quantile=0.9, max_seq_len=512)
+        spec = ReplicaSpec(max_slots=8, kv_budget=4096, speed=2,
+                           prefill_tokens_per_step=64, page_size=16)
+        row = _run(spec, pol, TRACE)
+        assert np.isfinite(row["mean_ttft"])
+        cl = Cluster((spec, spec), pol, router="jsq",
+                     predictor=LatentOracle())
+        crow = cl.run(TRACE).row()
+        assert np.isfinite(crow["p99_ttft"])
+
+    def test_request_ttft_property(self):
+        r = Request(rid=0, arrival=10.0, prompt_len=4, true_len=8)
+        assert r.ttft == np.inf
+        r.t_first_token = 25.0
+        assert r.ttft == 15.0
+        assert r.fresh_copy().t_first_token is None
+
+
+class TestServableHeadRegression:
+    """Bugfix: the unservable-head drop must route through the KV pool's
+    sharing-aware feasibility, not a raw ``pages_for(need) > pages_total``
+    test. A session follow-up whose resident shared prefix covers part of
+    its need used to be dropped as unservable even though the pool itself
+    said it could start."""
+
+    def test_shared_prefix_head_not_dropped(self):
+        spec = ReplicaSpec(max_slots=2, kv_budget=256, page_size=16,
+                           share_prefixes=True)
+        pol = Policy("fcfs", "oracle", max_seq_len=512)
+        # A seeds the shared prefix (8 pages resident after it finishes);
+        # B's raw need (272 tokens = 17 pages) exceeds the 16-page pool, but
+        # 8 of those pages are the already-resident prefix.
+        a = Request(rid=0, arrival=0.0, prompt_len=128, true_len=16,
+                    prefix_id="s", prefix_len=128)
+        b = Request(rid=1, arrival=4.0, prompt_len=160, true_len=112,
+                    prefix_id="s", prefix_len=128, deadline=400.0)
+        eng = SimEngine(spec=spec, policy=pol, vectorized=True)
+        st_ = eng.run([a, b])
+        assert st_.dropped == 0          # pre-fix: b dropped on first check
+        assert st_.completed + st_.timed_out == 2
+
+    def test_oversized_raw_need_still_dropped(self):
+        """No sharing in play: a request larger than the whole pool is still
+        recognized as unservable and dropped."""
+        spec = ReplicaSpec(max_slots=2, kv_budget=256, page_size=16)
+        pol = Policy("fcfs", "oracle", max_seq_len=512)
+        big = Request(rid=0, arrival=0.0, prompt_len=200, true_len=112)
+        st_ = SimEngine(spec=spec, policy=pol).run([big])
+        assert st_.dropped == 1
+
+
+class TestStealFitRounding:
+    """Bugfix: ``steal_queued(fit=)`` must compare the THIEF's page-rounded
+    grant, not raw tokens — a raw comparison passes requests whose rounded
+    need exceeds the thief's pool, which then drops them on arrival."""
+
+    def _engine_with_queue(self, needs):
+        pol = Policy("fcfs", "oracle", max_seq_len=512)
+        eng = SimEngine(spec=ReplicaSpec(4, 1024, page_size=16), policy=pol)
+        eng.reset()
+        for i, (prompt, res) in enumerate(needs):
+            r = Request(rid=i, arrival=0.0, prompt_len=prompt, true_len=res,
+                        reserve_len=float(res))
+            eng._push_ready(r)
+        return eng
+
+    def test_rounded_need_filter(self):
+        # raw needs 30 and 14; at thief page size 16 they round to 32 and 16
+        eng = self._engine_with_queue([(20, 10), (8, 6)])
+        out = eng.steal_queued(2, fit=31, fit_page_size=16)
+        assert [int(r.prompt_len + r.reserve_len) for r in out] == [14]
+
+    def test_page_size_one_reproduces_raw_filter(self):
+        eng = self._engine_with_queue([(20, 10), (8, 6)])
+        out = eng.steal_queued(2, fit=31, fit_page_size=1)
+        assert sorted(int(r.prompt_len + r.reserve_len) for r in out) \
+            == [14, 30]
+
+    def test_cluster_passes_thief_page_size(self):
+        """The cluster steal path must forward the thief's page size."""
+        specs = (ReplicaSpec(8, 8 * (256 + 512), speed=1, page_size=4),
+                 ReplicaSpec(2, 512, speed=4, page_size=8))
+        reqs = _trace(n=300, seed=6, pattern="bursty", rate=1.5)
+        seen = []
+        orig = SimEngine.steal_queued
+
+        def spy(self, k, mode="tail", fit=None, fit_page_size=1):
+            seen.append((fit, fit_page_size))
+            return orig(self, k, mode, fit, fit_page_size)
+
+        SimEngine.steal_queued = spy
+        try:
+            Cluster(specs, Policy("fcfs", "quantile", quantile=0.9,
+                                  max_seq_len=512),
+                    router="psq", predictor=LatentOracle(),
+                    rebalance_every=20, steal="quantile").run(reqs)
+        finally:
+            SimEngine.steal_queued = orig
+        assert seen
+        legal = {(s.kv_budget, s.page_size) for s in specs}
+        assert set(seen) <= legal
+
+
+class TestQuantileFallbackRegression:
+    """Bugfix: under ``reserve="max"`` every request's ``reserve_len`` is the
+    policy cap — an uninformative constant that used to masquerade as a
+    per-request quantile in laxity ordering and quantile stealing. With the
+    cap passed, the fallback skips it and uses the point prediction."""
+
+    def _req(self, reserve, **kw):
+        return Request(rid=0, arrival=0.0, prompt_len=10, true_len=100,
+                       reserve_len=reserve, **kw)
+
+    def test_cap_reservation_falls_through_to_point_prediction(self):
+        r = self._req(512.0, predicted_len=50.0, generated=10)
+        assert quantile_remaining(r, max_cap=512.0) == 40.0
+        # legacy call without the cap keeps the old (documented) behavior
+        assert quantile_remaining(r) == 502.0
+
+    def test_informative_reservation_still_used(self):
+        r = self._req(100.0, predicted_len=50.0, generated=10)
+        assert quantile_remaining(r, max_cap=512.0) == 90.0
+
+    def test_pred_q_always_wins(self):
+        r = self._req(512.0, predicted_len=50.0, pred_q=200.0, generated=10)
+        assert quantile_remaining(r, max_cap=512.0) == 190.0
+
+    def test_laxity_key_uses_cap(self):
+        r = self._req(512.0, predicted_len=50.0, generated=10, deadline=300.0)
+        assert order_key(r, "laxity", max_cap=512.0) == 300.0 - 40.0
+
+
+class TestChunkAwareAdmission:
+    """The admission ETA must price chunked prefill: ceil(prompt / chunk)
+    ticks before the first decode token."""
+
+    class _IdleEngine:
+        def predicted_backlog(self):
+            return 0.0
+
+    def test_chunked_prefill_priced_into_eta(self):
+        spec = ReplicaSpec(4, 1024, speed=1, step_token_budget=128,
+                           prefill_chunk_tokens=32, page_size=16)
+        req = Request(rid=0, arrival=0.0, prompt_len=100, true_len=50,
+                      reserve_len=50.0, deadline=52.0)
+        ac = AdmissionController(slack=1.0)
+        # decode = 50 ticks, prefill = ceil(100/32) = 4 -> eta 54 > 52
+        assert not ac.admit(req, self._IdleEngine(), spec, now=0.0)
+        assert ac.admit(dataclasses.replace(req, deadline=54.0),
+                        self._IdleEngine(), spec, now=0.0)
+
+    def test_atomic_budget_prices_whole_budget_chunks(self):
+        spec = ReplicaSpec(4, 1024, speed=1, step_token_budget=64,
+                           page_size=16)
+        req = Request(rid=0, arrival=0.0, prompt_len=100, true_len=50,
+                      reserve_len=50.0, deadline=51.5)
+        # chunk = budget = 64 -> prefill = 2 ticks -> eta 52 > 51.5
+        assert not AdmissionController(slack=1.0).admit(
+            req, self._IdleEngine(), spec, now=0.0)
+
+
+class TestChunkAwarePredictorBatching:
+    """Dispatch-time scoring rides the chunked batch-prefill: one step
+    starts at most budget // chunk prompts, so the fused batch caps there."""
+
+    def test_max_batch_capped_by_lanes(self):
+        svc = PredictorService(object(), step_token_budget=64,
+                               prefill_chunk_tokens=8, max_batch=512)
+        assert svc.max_batch == 8
+        svc = PredictorService(object(), step_token_budget=512,
+                               prefill_chunk_tokens=4, max_batch=512)
+        assert svc.max_batch == 128
+
+    def test_atomic_budget_floors_at_min_bucket(self):
+        svc = PredictorService(object(), step_token_budget=64, max_batch=512)
+        assert svc.max_batch == 8          # 1 lane, floored at pad bucket
+
+    def test_no_budget_keeps_max_batch(self):
+        assert PredictorService(object(), max_batch=512).max_batch == 512

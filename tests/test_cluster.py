@@ -546,8 +546,8 @@ class TestWorkStealing:
             moved = []
             orig = SimEngine.steal_queued
 
-            def spy(self, k, mode="tail", fit=None):
-                out = orig(self, k, mode, fit)
+            def spy(self, k, mode="tail", fit=None, fit_page_size=1):
+                out = orig(self, k, mode, fit, fit_page_size)
                 moved.extend(float(r.reserve_len) for r in out)
                 return out
 
@@ -593,11 +593,11 @@ class TestRequestCopy:
         r = Request(rid=7, arrival=3.5, prompt_len=64, true_len=200,
                     phi=np.arange(4.0), predicted_len=180.0,
                     reserve_len=220.0, setting="qwen/math", deadline=903.5,
-                    replica=2, t_start=10.0, t_finish=250.0, generated=200,
-                    overflows=3)
+                    replica=2, t_start=10.0, t_finish=250.0,
+                    t_first_token=12.0, generated=200, overflows=3)
         c = r.fresh_copy()
-        reset = dict(replica=None, t_start=None, t_finish=None, generated=0,
-                     overflows=0)
+        reset = dict(replica=None, t_start=None, t_finish=None,
+                     t_first_token=None, generated=0, overflows=0)
         for f in dataclasses.fields(Request):
             want = reset[f.name] if f.name in reset else getattr(r, f.name)
             got = getattr(c, f.name)
@@ -670,8 +670,8 @@ class TestUndersizedReplica:
         moved_needs = []
         orig = SimEngine.steal_queued
 
-        def spy(self, k, mode="tail", fit=None):
-            out = orig(self, k, mode, fit)
+        def spy(self, k, mode="tail", fit=None, fit_page_size=1):
+            out = orig(self, k, mode, fit, fit_page_size)
             moved_needs.extend(
                 (int(r.prompt_len + r.reserve_len), fit) for r in out)
             return out
