@@ -26,6 +26,13 @@ Tracks:
   prefix sharing off/on × {jsq, prefix_affine} routing. Reports KV
   amplification (logical tokens served per physical token reserved) and
   prefill ticks erased by prefix cache hits.
+* ``run_cluster_refine`` — mid-flight posterior refinement: the dispatch
+  histogram frozen for the request's lifetime (prompt-only) vs re-conditioned
+  on survival every ``refine_every`` ticks (truncate-renorm) vs additionally
+  hazard-corrected by a learned table, crossed with SRTF+preempt / laxity
+  orderings in a KV-bound regime. Reports remaining-work MAE by decode
+  progress plus the p99/SLO wins (and KV-capacity cost) of refreshed keys
+  and repriced reservations.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--cluster-only]
 
@@ -769,6 +776,194 @@ def validate_cluster_chunked(rows) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# mid-flight posterior refinement: prompt-only vs truncate-renorm vs hazard
+# ---------------------------------------------------------------------------
+
+REFINE_MODES = (
+    # (label, refine?, hazard?) — "prompt-only" is the dispatch-time head
+    # frozen for the request's lifetime (refine_every=0, the pre-refinement
+    # engine bit-exactly); "renorm" re-conditions each active slot's ProD-D
+    # histogram on survival (P[L = l | L > t], pure truncate-renormalize)
+    # every refine tick; "hazard" additionally applies the learned
+    # hazard-rate correction fit from repeated-generation traces.
+    ("prompt-only", False, False),
+    ("renorm", True, False),
+    ("hazard", True, True),
+)
+
+REFINE_T_GRID = (16, 32, 64, 128, 256, 512)
+
+
+def _mae_by_progress(reqs, refiner, t_grid=REFINE_T_GRID) -> list:
+    """Remaining-work MAE by decode progress on an annotated trace:
+    posterior quantile-0.5 remaining vs the static prompt-only median
+    (``max(predicted_len − t, 1)``), over requests still alive at t."""
+    out = []
+    for t in t_grid:
+        alive = [r for r in reqs if r.true_len > t]
+        if len(alive) < 50:
+            break
+        post = float(np.mean(
+            [abs((refiner.quantile(r.pred_probs, float(t), 0.5) - t)
+                 - (r.true_len - t)) for r in alive]))
+        prompt = float(np.mean(
+            [abs(max(r.predicted_len - t, 1.0) - (r.true_len - t))
+             for r in alive]))
+        out.append({"t": t, "alive": len(alive), "posterior_mae": post,
+                    "prompt_only_mae": prompt, "posterior_wins":
+                    bool(post < prompt)})
+    return out
+
+
+def run_cluster_refine(n_requests=50_000, n_replicas=4, max_slots=16,
+                       load=0.97, seed=0, refine_every=128, verbose=True):
+    """Mid-flight posterior refinement table: {prompt-only, truncate-renorm,
+    learned-hazard} × {SRTF+preempt-keep, least-laxity} on one KV-bound
+    heavy-tailed mixed trace served by the trained ProD-D head.
+
+    The regime is chosen so refinement has something to move: at ``load``
+    the KV pool (not slots) binds admission, deadlines are tight, and the
+    mixed laws generate real over-runners — requests that outlive their
+    dispatch quantile and collapse onto the ``max(rem, 1)`` key floor
+    without refinement. The table reports where conditioning on survival
+    buys p99 / SLO wins (SRTF victim choice and re-queue keys) and what the
+    grown posterior reservations cost in throughput; the hazard rows show
+    the learned correction shrinking over-reservations (capacity back). A
+    ``mae_by_t`` sub-table (held-out trace) measures how fast the posterior
+    beats the frozen prompt-only head as decode progresses."""
+    import jax
+
+    from repro.core.online import PosteriorRefiner, fit_hazard_table
+
+    if n_requests <= 0:
+        print("empty trace (n_requests=0): nothing to replay")
+        return []
+    probe = make_trace(TraceConfig(n_requests=2000, rate=1.0, seed=seed))
+    rate = stable_rate(n_replicas, max_slots, mean_true_length(probe), load)
+    cfg = TraceConfig(n_requests=n_requests, rate=rate, pattern="bursty",
+                      model="mix", scenario="mix", seed=seed,
+                      slo_factor=6.0, slo_floor=100.0)
+    t0 = time.time()
+    head = fit_trace_head(cfg, n_train=2000, r=8, n_bins=32, hidden=64,
+                          seed=seed + 7)
+    t_train = time.time() - t0
+    edges = np.asarray(head.edges, np.float64)
+    anno_pol = Policy("fcfs", "quantile", quantile=0.9, max_seq_len=4096)
+    svc = PredictorService(head, window=16.0)
+    # hazard correction: fit on a disjoint repeated-generation trace
+    t0 = time.time()
+    fit_reqs = make_trace(TraceConfig(n_requests=3000, rate=1.0, model="mix",
+                                      scenario="mix", seed=seed + 101))
+    svc.annotate(fit_reqs, anno_pol)
+    hazard = fit_hazard_table(
+        jax.random.PRNGKey(seed + 3),
+        np.stack([r.pred_probs for r in fit_reqs]),
+        np.array([r.true_len for r in fit_reqs], np.float64), edges)
+    t_hazard = time.time() - t0
+    refiners = {"renorm": PosteriorRefiner(edges),
+                "hazard": PosteriorRefiner(edges, hazard=hazard)}
+    # held-out MAE-by-progress table (how fast the posterior wins)
+    held = make_trace(TraceConfig(n_requests=3000, rate=1.0, model="mix",
+                                  scenario="mix", seed=seed + 202))
+    svc.annotate(held, anno_pol)
+    mae = {m: _mae_by_progress(held, rz) for m, rz in refiners.items()}
+    reqs = make_trace(cfg)
+    if verbose:
+        print(f"refine trace: {len(reqs)} requests (bursty, rate "
+              f"{rate:.3f}/step, KV-bound); head fit {t_train:.1f}s, hazard "
+              f"table fit {t_hazard:.1f}s; refine_every={refine_every}")
+        for m in refiners:
+            won = [r["t"] for r in mae[m] if r["posterior_wins"]]
+            print(f"  mae_by_t[{m}]: posterior wins from t={won[0] if won else '-'}"
+                  f" (grid {', '.join(str(r['t']) for r in mae[m])})")
+        print(f"  {'mode':12s} {'order':10s} {'p50':>7s} {'p99':>9s} "
+              f"{'slo':>5s} {'t/o':>5s} {'goodput':>8s} {'thr':>7s} "
+              f"{'waste':>6s} {'shrink':>6s} {'grow':>6s} {'secs':>5s}")
+    rows = []
+    for order in ("srtf_pred", "laxity"):
+        for label, refine, use_hazard in REFINE_MODES:
+            pol = Policy(order, "quantile", quantile=0.9, max_seq_len=4096,
+                         preempt=(order == "srtf_pred"), preempt_factor=1.5,
+                         preempt_mode="keep",
+                         refine_every=refine_every if refine else 0)
+            rz = refiners["hazard" if use_hazard else "renorm"] \
+                if refine else None
+            specs = tuple(ReplicaSpec(max_slots=max_slots, kv_budget=8192,
+                                      page_size=16, speed=2,
+                                      prefill_tokens_per_step=64)
+                          for _ in range(n_replicas))
+            t0 = time.time()
+            st = Cluster(specs, pol, router="psq",
+                         predictor=PredictorService(head, window=16.0),
+                         refiner=rz).run(reqs)
+            dt = time.time() - t0
+            row = st.row()
+            row.update(mode=label, order=order, seconds=dt,
+                       mae_by_t=mae.get(label, []))
+            rows.append(row)
+            if verbose:
+                print(f"  {label:12s} {order:10s} {st.p50_latency:7.1f} "
+                      f"{st.p99_latency:9.1f} {st.slo_violations:5d} "
+                      f"{st.timed_out:5d} {st.goodput:8.2f} "
+                      f"{st.throughput:7.2f} {st.kv_waste_ratio:6.3f} "
+                      f"{st.refine_shrinks:6d} {st.refine_grows:6d} "
+                      f"{dt:5.1f}")
+    return rows
+
+
+def validate_cluster_refine(rows) -> dict:
+    if not rows:
+        return {"empty_trace": True}
+    by = {(r["mode"], r["order"]): r for r in rows}
+    po_s = by[("prompt-only", "srtf_pred")]
+    rn_s = by[("renorm", "srtf_pred")]
+    hz_s = by[("hazard", "srtf_pred")]
+    po_l = by[("prompt-only", "laxity")]
+    hz_l = by[("hazard", "laxity")]
+    n = po_s["completed"] + po_s["timed_out"] + po_s["dropped"] \
+        + po_s["rejected"]
+    mae = rn_s["mae_by_t"]
+    wins = [m["t"] for m in mae if m["posterior_wins"]]
+    return {
+        "all_accounted": all(
+            r["completed"] + r["timed_out"] + r["dropped"] + r["rejected"]
+            == n for r in rows),
+        "refine_exercised": rn_s["refine_events"] > 0
+        and hz_s["refine_shrinks"] > 0,
+        "prompt_only_is_inert": po_s["refine_events"] == 0,
+        # acceptance: the posterior's remaining-work MAE strictly beats the
+        # frozen prompt-only head from some progress point on
+        "mae_posterior_wins_at_some_t": bool(wins),
+        "mae_first_win_t": wins[0] if wins else None,
+        "mae_final_gain_pct": 100.0 * (1.0 - mae[-1]["posterior_mae"]
+                                       / max(mae[-1]["prompt_only_mae"],
+                                             1e-9)) if mae else 0.0,
+        # acceptance: refreshed SRTF keys (over-runners become preemptable
+        # and re-queue behind genuine shorts) must not cost tail latency
+        "posterior_srtf_p99_not_worse":
+            rn_s["p99_latency"] <= po_s["p99_latency"]
+        and hz_s["p99_latency"] <= po_s["p99_latency"],
+        "srtf_p99_gain_pct": 100.0 * (1.0 - rn_s["p99_latency"]
+                                      / max(po_s["p99_latency"], 1e-9)),
+        # ... and buys an SLO-attainment win on the SRTF row
+        "posterior_srtf_slo_win":
+            rn_s["slo_violations"] < po_s["slo_violations"],
+        # hazard shrinks hand KV capacity back on the laxity row (no
+        # preemption churn there, so the reservation effect is isolated):
+        # reported plus gated loosely — goodput must not regress
+        "hazard_laxity_goodput_not_worse":
+            hz_l["goodput"] >= po_l["goodput"],
+        "hazard_laxity_goodput_gain_pct":
+            100.0 * (hz_l["goodput"] / max(po_l["goodput"], 1e-9) - 1.0),
+        # the honest cost: grown posterior reservations eat KV-bound
+        # throughput on the SRTF row (reported, not gated)
+        "renorm_srtf_goodput_delta_pct":
+            100.0 * (rn_s["goodput"] / max(po_s["goodput"], 1e-9) - 1.0),
+        "replay_under_120s": all(r["seconds"] < 120.0 for r in rows),
+    }
+
+
+# ---------------------------------------------------------------------------
 # online adaptation: static vs conformal vs conformal+refresh, under drift
 # ---------------------------------------------------------------------------
 
@@ -929,9 +1124,10 @@ def _write_stamp(path, tables, **meta):
 
 def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
          preemption_only=False, prefix_only=False, chunked_only=False,
-         n_requests=50_000, n_replicas=4, max_slots=32, pattern="bursty",
-         seed=0, hetero=True, predictors=True, adaptation=True,
-         preemption=True, prefix=True, chunked=True, stamp=None):
+         refine_only=False, n_requests=50_000, n_replicas=4, max_slots=32,
+         pattern="bursty", seed=0, hetero=True, predictors=True,
+         adaptation=True, preemption=True, prefix=True, chunked=True,
+         refine=True, stamp=None):
     tables = {}
 
     def finish(name, rows, checks):
@@ -941,6 +1137,24 @@ def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
                          n_replicas=n_replicas, max_slots=max_slots,
                          pattern=pattern, seed=seed)
 
+    if refine_only:
+        rrows = run_cluster_refine(n_requests=n_requests,
+                                   n_replicas=n_replicas, seed=seed)
+        checks = validate_cluster_refine(rrows)
+        print("refine checks:", checks)
+        finish("cluster_refine", rrows, checks)
+        # CI smoke mode is a regression gate: hard-fail on the acceptance
+        # booleans so a posterior-refinement regression (tail latency, SLO,
+        # calibration-vs-progress, or hazard capacity hand-back) turns the
+        # nightly job red
+        hard = ("all_accounted", "refine_exercised", "prompt_only_is_inert",
+                "mae_posterior_wins_at_some_t",
+                "posterior_srtf_p99_not_worse", "posterior_srtf_slo_win",
+                "hazard_laxity_goodput_not_worse", "replay_under_120s")
+        bad = [k for k in hard if not checks.get(k, False)]
+        if bad:
+            raise SystemExit(f"refine acceptance failed: {bad}")
+        return rrows
     if chunked_only:
         crows = run_cluster_chunked(n_requests=n_requests,
                                     n_replicas=n_replicas, seed=seed)
@@ -1062,6 +1276,12 @@ def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
         checks = validate_cluster_chunked(krows)
         print("chunked checks:", checks)
         finish("cluster_chunked", krows, checks)
+    if refine and (cluster or cluster_only):
+        rrows = run_cluster_refine(n_requests=n_requests,
+                                   n_replicas=n_replicas, seed=seed)
+        checks = validate_cluster_refine(rrows)
+        print("refine checks:", checks)
+        finish("cluster_refine", rrows, checks)
     return rows
 
 
@@ -1081,6 +1301,9 @@ if __name__ == "__main__":
     ap.add_argument("--chunked-only", action="store_true",
                     help="run only the chunked-prefill TTFT-vs-throughput "
                          "table (CI smoke)")
+    ap.add_argument("--refine-only", action="store_true",
+                    help="run only the mid-flight posterior-refinement "
+                         "table (CI smoke)")
     ap.add_argument("--stamp", metavar="PATH", default=None,
                     help="write rows + validation checks of every table run "
                          "to PATH as JSON (e.g. BENCH_serving.json)")
@@ -1096,6 +1319,8 @@ if __name__ == "__main__":
                     help="skip the prefix-sharing/affinity table")
     ap.add_argument("--no-chunked", action="store_true",
                     help="skip the chunked-prefill TTFT table")
+    ap.add_argument("--no-refine", action="store_true",
+                    help="skip the posterior-refinement table")
     ap.add_argument("--n-requests", type=int, default=50_000)
     ap.add_argument("--n-replicas", type=int, default=4)
     ap.add_argument("--max-slots", type=int, default=32)
@@ -1105,10 +1330,12 @@ if __name__ == "__main__":
     args = ap.parse_args()
     main(cluster_only=args.cluster_only, adaptation_only=args.adaptation_only,
          preemption_only=args.preemption_only, prefix_only=args.prefix_only,
-         chunked_only=args.chunked_only, n_requests=args.n_requests,
+         chunked_only=args.chunked_only, refine_only=args.refine_only,
+         n_requests=args.n_requests,
          n_replicas=args.n_replicas, max_slots=args.max_slots,
          pattern=args.pattern, seed=args.seed, hetero=not args.no_hetero,
          predictors=not args.no_predictors,
          adaptation=not args.no_adaptation,
          preemption=not args.no_preemption, prefix=not args.no_prefix,
-         chunked=not args.no_chunked, stamp=args.stamp)
+         chunked=not args.no_chunked, refine=not args.no_refine,
+         stamp=args.stamp)

@@ -118,6 +118,12 @@ def coverage_of(requests, since: Optional[float] = None) -> float:
     This is THE coverage semantics of the subsystem — the same comparison
     (with the same float tolerance) :meth:`OnlineAdapter.observe` scores, so
     benches/tests/examples can never drift from what the controller steers.
+
+    Under ``Policy.refine_every > 0`` the engine re-cuts ``cal_q`` on the
+    posterior (same effective level, recovered from the dispatch histogram),
+    so coverage — and therefore the ACI feedback — is tracked against the
+    *refreshed* reservation rather than the stale dispatch-time one
+    (conformal-on-posterior; see ``docs/serving.md``).
     """
     scored = [r for r in requests
               if r.cal_q is not None

@@ -109,6 +109,10 @@ class ClusterStats:
     prefill_ticks: int = 0         # prefill ticks actually paid
     prefill_saved_ticks: int = 0   # prefill ticks erased by prefix hits
     shared_peak: int = 0           # Σ per-replica peak shared tokens
+    # posterior refinement, aggregated over replicas (0 with refine off)
+    refine_events: int = 0
+    refine_shrinks: int = 0
+    refine_grows: int = 0
     # time-to-first-token percentiles over all completed requests (inf when
     # none emitted; see ServeStats)
     mean_ttft: float = float("inf")
@@ -160,6 +164,9 @@ class Cluster:
         prefix-holding replica may carry over the lightest one before
         affinity yields to jsq. 0 = pure load balancing, large = sticky
         sessions.
+    refiner : optional :class:`~repro.core.online.PosteriorRefiner` over
+        the predictor's bin edges, handed to every replica engine. Required
+        when ``policy.refine_every > 0``; ignored otherwise.
 
     A ``predictor`` that also exposes ``observe`` (an
     :class:`~repro.serving.adaptation.OnlineAdapter`) switches :meth:`run`
@@ -173,7 +180,7 @@ class Cluster:
                  router: str = "round_robin", predictor=None,
                  vectorized: bool = True, rebalance_every: int = 0,
                  steal: str = "tail", steal_cost: int = 0, admission=None,
-                 prefix_imbalance: float = 8.0):
+                 prefix_imbalance: float = 8.0, refiner=None):
         if router not in ROUTERS:
             raise ValueError(f"router {router!r} not in {ROUTERS}")
         if steal not in STEAL_MODES:
@@ -200,9 +207,10 @@ class Cluster:
         self.steal_delay = 0
         self.steal_pages = 0
         self.rejected_requests: List[Request] = []
+        self.refiner = refiner
         self.engines = [
             SimEngine(policy=policy, predictor=None, vectorized=vectorized,
-                      spec=spec)
+                      spec=spec, refiner=refiner)
             for spec in specs
         ]
         self._rr = 0
@@ -484,6 +492,9 @@ class Cluster:
             prefill_saved_ticks=sum(e.prefill_saved_ticks
                                     for e in self.engines),
             shared_peak=sum(e.kv.shared_peak for e in self.engines),
+            refine_events=sum(e.refine_events for e in self.engines),
+            refine_shrinks=sum(e.refine_shrinks for e in self.engines),
+            refine_grows=sum(e.refine_grows for e in self.engines),
             replica_rows=[e.stats().row() for e in self.engines],
             **_latency_stats(done),
             **_ttft_stats(done),

@@ -155,6 +155,10 @@ class ServeStats:
     shared_peak: int = 0           # peak tokens in live shared pages
     prefill_ticks: int = 0         # prefill ticks actually paid
     prefill_saved_ticks: int = 0   # prefill ticks erased by prefix hits
+    # posterior refinement (all 0 unless Policy.refine_every > 0)
+    refine_events: int = 0         # active-slot quantile refreshes applied
+    refine_shrinks: int = 0        # re-reservations that released pages
+    refine_grows: int = 0          # re-reservations that drew new pages
     # time-to-first-token percentiles (t_first_token − arrival, over
     # completed requests that emitted at least one token; inf when none did)
     mean_ttft: float = float("inf")
@@ -239,7 +243,8 @@ class SimEngine:
     def __init__(self, max_slots: Optional[int] = None,
                  kv_budget: Optional[int] = None,
                  policy: Optional[Policy] = None, predictor=None,
-                 vectorized: bool = True, spec: Optional[ReplicaSpec] = None):
+                 vectorized: bool = True, spec: Optional[ReplicaSpec] = None,
+                 refiner=None):
         if spec is None:
             if max_slots is None or kv_budget is None:
                 raise ValueError(
@@ -253,6 +258,16 @@ class SimEngine:
         self.policy = policy
         self.predictor = predictor
         self.vectorized = vectorized
+        # posterior refinement (Policy.refine_every > 0): every refine tick
+        # the engine re-conditions active-slot histograms on decode progress
+        # via this PosteriorRefiner; 0 keeps every legacy path bit-identical
+        # (the refiner, if passed, is never consulted)
+        self.refiner = refiner
+        self._refine_every = int(policy.refine_every)
+        if self._refine_every > 0 and refiner is None:
+            raise ValueError(
+                "Policy.refine_every > 0 needs a PosteriorRefiner over the "
+                "predictor's bin edges (pass refiner=... to the engine)")
         self._kv_budget = spec.kv_budget
         # step-token-budget mode: None keeps every legacy path bit-identical
         self._budget = spec.step_token_budget
@@ -281,6 +296,14 @@ class SimEngine:
         self.prefill_ticks = 0
         self.prefill_saved_ticks = 0
         self.held_releases = 0
+        self.refine_events = 0
+        self.refine_shrinks = 0
+        self.refine_grows = 0
+        # next tick whose start crosses the refine schedule (multiples of
+        # refine_every); kept a pure function of t so both decode paths and
+        # idle skips land on identical refine ticks
+        self._next_refine = float(self._refine_every) if self._refine_every \
+            else np.inf
         self._held_tokens = 0       # Σ tokens held by preempted waiters here
         self._held_ready = 0        # the ready-queue (releasable) part
         self._held_peak = 0
@@ -317,9 +340,11 @@ class SimEngine:
 
     def _order_key(self, r: Request) -> float:
         # max_cap lets quantile_remaining spot an uninformative reserve="max"
-        # reservation and fall through to the point prediction
+        # reservation and fall through to the point prediction; the refiner
+        # (refinement enabled only) keeps over-runner keys well-defined
         return order_key(r, self.policy.order,
-                         max_cap=float(self.policy.max_seq_len))
+                         max_cap=float(self.policy.max_seq_len),
+                         refiner=self.refiner if self._refine_every else None)
 
     @staticmethod
     def _queue_need(r: Request) -> int:
@@ -429,9 +454,11 @@ class SimEngine:
             return []
         if mode == "quantile":
             cap = float(self.policy.max_seq_len)
+            rz = self.refiner if self._refine_every else None
 
             def keyf(e):
-                return (quantile_remaining(e[2], max_cap=cap), e[1])
+                return (quantile_remaining(e[2], max_cap=cap, refiner=rz),
+                        e[1])
         else:   # 'tail': largest policy key = served last
             keyf = None
         idx = sorted(range(len(self._ready)),
@@ -931,8 +958,79 @@ class SimEngine:
             return True
         return n * self.spec.speed > self._budget
 
+    def _refine_active(self):
+        """Posterior refinement of every decoding slot (one refine tick).
+
+        For each active slot with a ProD-D histogram and decode progress
+        t > 0, re-condition on survival (P[L = ℓ | L > t] via the
+        :class:`~repro.core.online.PosteriorRefiner`) and refresh:
+
+        * the median → ``predicted_len`` / ``_a_pred`` (SRTF victim choice,
+          ``chunk_order="prod"``, predicted-backlog routing);
+        * the work quantile → ``pred_q`` (laxity / quantile-steal keys);
+        * the reservation quantile → ``reserve_len`` + a KV ``reprice``
+          (pages released when the posterior moved the page-rounded grant
+          down, delta pages drawn — feasibility-checked — when it moved up).
+
+        Reservation re-cuts happen at the request's *effective* dispatch
+        level: for conformally-calibrated requests the level is recovered
+        once from (histogram, ``cal_q``) — the OnlineAdapter's ACI-adjusted
+        ``q_eff`` — and ``cal_q`` is refreshed to the posterior quantile at
+        that same level, so ACI coverage tracks the refreshed estimate
+        (conformal-on-posterior). Slots still prefilling, at t = 0, or
+        without a histogram (oracle annotation paths) are skipped; so are
+        ``reserve="max"``/``"oracle"`` reservations (cap/realized — nothing
+        to re-cut), though their ordering quantiles still refresh."""
+        pol = self.policy
+        rz = self.refiner
+        sp = self.spec.speed
+        for i in range(self._n_active):
+            if self._a_pref[i] > 0 or self._a_pftok[i] > 0:
+                continue            # prefilling: no decode progress yet
+            t_dec = float(self._a_gen[i])
+            if t_dec <= 0.0:
+                continue            # posterior == prior at t = 0
+            r = self._slots[i]
+            p = r.pred_probs
+            if p is None:
+                continue            # no histogram attached (oracle paths)
+            med, work = rz.quantiles(p, t_dec, (0.5, rz.work_quantile))
+            r.predicted_len = float(med)
+            r.pred_q = float(work)
+            self._a_pred[i] = float(med)
+            self.refine_events += 1
+            if pol.reserve == "quantile":
+                if r.pred_level is None:
+                    r.pred_level = rz.level_of(p, r.cal_q) \
+                        if r.cal_q is not None else float(pol.quantile)
+                tgt = rz.quantile(p, t_dec, r.pred_level)
+            elif pol.reserve == "predicted":
+                tgt = float(med) * pol.margin
+            else:
+                continue            # max/oracle: reservation not prediction-cut
+            res = float(min(max(tgt, 8.0), pol.max_seq_len))
+            r.reserve_len = res
+            if r.cal_q is not None:
+                r.cal_q = res       # conformal-on-posterior (see docstring)
+            # page-boundary move only: floor at current content + one tick
+            # of headroom so a shrink never forces an immediate grow/overflow
+            want = max(int(r.prompt_len) + int(np.ceil(res)),
+                       int(self._a_used[i]) + sp)
+            cur = self.kv.pages_of(r.rid)
+            if self.kv.reprice(r.rid, want):
+                new = self.kv.pages_of(r.rid)
+                if new < cur:
+                    self.refine_shrinks += 1
+                elif new > cur:
+                    self.refine_grows += 1
+                self._a_res[i] = self.kv.reserved[r.rid]
+
     def step(self):
         """One engine tick: admit → (preempt) → decode one token per slot."""
+        if self._refine_every and self.t >= self._next_refine:
+            self._refine_active()
+            self._next_refine = (np.floor(self.t / self._refine_every) + 1.0) \
+                * self._refine_every
         if (self._n_active == 0 and not self._ready
                 and (not self._future or self._future[0][0] > self.t)):
             self.t += 1.0   # fully idle tick: nothing to admit or decode
@@ -979,6 +1077,11 @@ class SimEngine:
         :meth:`leap`."""
         k = np.inf
         sp = self.spec.speed
+        if self._refine_every and self._n_active:
+            # refine ticks are evented (like budget-constrained ticks):
+            # leaps never span a posterior refresh, so both decode paths
+            # refine at identical ticks and stay bit-exact
+            k = min(k, max(1.0, self._next_refine - self.t))
         if self._future:
             # arrival due at the tick whose start time ≥ arrival
             k = min(k, max(1.0, np.ceil(self._future[0][0] - self.t) + 1.0))
@@ -1120,6 +1223,9 @@ class SimEngine:
             shared_peak=self.kv.shared_peak,
             prefill_ticks=self.prefill_ticks,
             prefill_saved_ticks=self.prefill_saved_ticks,
+            refine_events=self.refine_events,
+            refine_shrinks=self.refine_shrinks,
+            refine_grows=self.refine_grows,
             **_latency_stats(self._done),
             **_ttft_stats(self._done),
         )

@@ -386,6 +386,29 @@ class KVCacheManager:
             self.used[rid] = keep
         return self.reserved[rid]
 
+    def reprice(self, rid: int, n_tokens: int) -> bool:
+        """Move a live reservation to the page-rounded grant for ``n_tokens``
+        — the posterior-refinement primitive. A smaller target shrinks
+        (frees the pages beyond it and lowers the ask, so a later grow
+        re-ratchets from the new level); a larger one grows through
+        :meth:`reserve` (feasibility-checked delta pages, not counted as an
+        overflow); an unchanged page count is a no-op (the ask keeps its
+        dispatch value — same-page re-cuts are fragmentation noise, not
+        demand). Returns whether the grant now covers ``n_tokens``; a
+        refused grow leaves the reservation exactly as it was."""
+        if rid not in self.reserved:
+            return False
+        want = max(0, int(n_tokens))
+        k = self.pages_for(max(want, self._shared_tok.get(rid, 0)))
+        cur = self.pages_of(rid)
+        if k < cur:
+            return self.shrink(rid, want) >= want
+        if k > cur:
+            if not self.can_reserve(rid, want):
+                return False
+            return self.reserve(rid, want)
+        return True
+
     def can_reserve(self, rid: int, n_tokens: int,
                     prefix_id: Optional[str] = None,
                     prefix_len: int = 0) -> bool:

@@ -25,8 +25,16 @@ class Request:
     pred_probs: Optional[np.ndarray] = None  # predictive histogram over bins
     # calibrated reservation quantile recorded at annotation time by an
     # OnlineAdapter — the conformal score target (true_len <= cal_q means
-    # covered). Immutable once set, unlike reserve_len which eviction may bump
+    # covered). Unlike reserve_len (which eviction may bump) it changes only
+    # under Policy.refine_every > 0, where each refine tick re-cuts it on the
+    # posterior at the same effective level, so ACI coverage is tracked
+    # against the refreshed estimate (conformal-on-posterior)
     cal_q: Optional[float] = None
+    # effective CDF level the reservation was cut at, recovered once from
+    # (pred_probs, cal_q) at the first refine tick — pinning it stops the
+    # level from ratcheting when later refines re-invert an already-refreshed
+    # cal_q against the dispatch histogram
+    pred_level: Optional[float] = None
     # trace provenance (cluster simulator)
     setting: Optional[str] = None       # "model/scenario" the law came from
     deadline: Optional[float] = None    # absolute SLO: must finish by this step
@@ -82,7 +90,8 @@ class Request:
         pattern, which silently breaks on non-init fields."""
         return dataclasses.replace(self, replica=None, t_start=None,
                                    t_finish=None, t_first_token=None,
-                                   generated=0, overflows=0, held=0)
+                                   generated=0, overflows=0, held=0,
+                                   pred_level=None)
 
 
 def workload_from_scenario(

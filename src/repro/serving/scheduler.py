@@ -68,6 +68,13 @@ class Policy:
         the ProD-aware allocation: predicted-short requests first (earliest
         deadline breaking ties), so short answers reach their first token
         before long ones monopolize the budget.
+    refine_every : posterior length refinement period in engine ticks.
+        Every ``refine_every`` ticks the engine re-conditions each active
+        slot's ProD-D histogram on its decode progress
+        (:class:`~repro.core.online.PosteriorRefiner`), refreshing the
+        median / work-quantile / reservation quantiles that SRTF, laxity,
+        stealing, chunk ordering, and KV sizing read. ``0`` (default)
+        disables refinement entirely — bit-identical legacy behavior.
     """
 
     order: str = "fcfs"            # see ORDERINGS
@@ -79,6 +86,7 @@ class Policy:
     preempt_factor: float = 2.0    # only if its remaining > factor × newcomer's
     preempt_mode: str = "recompute"   # see PREEMPT_MODES
     chunk_order: str = "fcfs"         # see CHUNK_ORDERS
+    refine_every: int = 0             # 0 = no mid-flight refinement
 
     def __post_init__(self):
         if self.preempt_mode not in PREEMPT_MODES:
@@ -87,6 +95,9 @@ class Policy:
         if self.chunk_order not in CHUNK_ORDERS:
             raise ValueError(
                 f"chunk_order {self.chunk_order!r} not in {CHUNK_ORDERS}")
+        if int(self.refine_every) != self.refine_every or self.refine_every < 0:
+            raise ValueError("refine_every must be a non-negative integer "
+                             "number of ticks (0 = off)")
 
 
 def predicted_remaining(r: Request) -> float:
@@ -95,7 +106,8 @@ def predicted_remaining(r: Request) -> float:
     return max(base - r.generated, 1.0)
 
 
-def quantile_remaining(r: Request, max_cap: Optional[float] = None) -> float:
+def quantile_remaining(r: Request, max_cap: Optional[float] = None,
+                       refiner=None) -> float:
     """Predicted q0.9 remaining work — the pessimistic remaining-tokens signal
     least-laxity ordering and quantile work stealing budget against.
 
@@ -109,7 +121,17 @@ def quantile_remaining(r: Request, max_cap: Optional[float] = None) -> float:
        reservation is a constant pseudo-quantile that would poison laxity
        ordering and quantile stealing, so it is skipped;
     3. the point prediction (``predicted_len``, else the realized length).
-    """
+
+    ``refiner`` (a :class:`~repro.core.online.PosteriorRefiner`, passed by
+    engines running with ``Policy.refine_every > 0``) repairs the
+    over-runner collapse: a request that has outlived its dispatch-time
+    quantile used to hit the ``max(base - generated, 1.0)`` floor, so every
+    over-runner keyed identically (1.0) and SRTF/laxity ordering, quantile
+    stealing, and victim choice among them degenerated to tie-break order.
+    Conditioning the histogram on survival to ``generated`` keeps the
+    remaining-work estimate well-defined (the posterior quantile is always
+    above ``generated``), so over-runners stay mutually ordered by their
+    tails."""
     if r.pred_q is not None:
         base = float(r.pred_q)
     elif r.reserve_len is not None and not (
@@ -117,6 +139,10 @@ def quantile_remaining(r: Request, max_cap: Optional[float] = None) -> float:
         base = float(r.reserve_len)
     else:
         base = predicted_remaining(r) + r.generated
+    if (refiner is not None and r.pred_probs is not None
+            and base - r.generated < 1.0):
+        base = refiner.quantile(r.pred_probs, float(r.generated),
+                                refiner.work_quantile)
     return max(base - r.generated, 1.0)
 
 
@@ -171,16 +197,18 @@ def annotate_predictions(requests: List[Request], predictor, policy: Policy):
 
 
 def order_key(r: Request, order: str,
-              max_cap: Optional[float] = None) -> float:
+              max_cap: Optional[float] = None, refiner=None) -> float:
     """Static heap key realizing ``order`` (FIFO tie-break happens outside).
 
     EDF keys on the absolute deadline; least-laxity keys on
     ``deadline − q0.9-remaining`` (see module docstring for why the static
     key is exact). ``max_cap`` (the policy's ``max_seq_len``) lets
     :func:`quantile_remaining` recognize an uninformative ``reserve="max"``
-    reservation and fall through to the point prediction. Requests without
-    a deadline key to +inf under both — they run FIFO after every
-    deadline-carrying request."""
+    reservation and fall through to the point prediction; ``refiner``
+    (engines with ``Policy.refine_every > 0``) keeps over-runner keys
+    well-defined via posterior conditioning. Requests without a deadline
+    key to +inf under both — they run FIFO after every deadline-carrying
+    request."""
     if order == "fcfs":
         return float(r.arrival)
     if order in ("sjf_pred", "srtf_pred"):
@@ -192,7 +220,8 @@ def order_key(r: Request, order: str,
     if order == "laxity":
         if r.deadline is None:
             return float("inf")
-        return float(r.deadline) - quantile_remaining(r, max_cap=max_cap)
+        return float(r.deadline) - quantile_remaining(r, max_cap=max_cap,
+                                                      refiner=refiner)
     raise ValueError(order)
 
 

@@ -14,7 +14,7 @@ from repro.serving.arrivals import (DriftSpec, LatentOracle, TraceConfig,
                                     make_trace, mean_true_length, stable_rate)
 from repro.serving.cluster import Cluster
 from repro.serving.engine import ReplicaSpec, SimEngine
-from repro.serving.predictor import PredictorService, fit_trace_head
+from repro.serving.predictor import PredictorService
 from repro.serving.request import Request
 from repro.serving.scheduler import Policy
 
@@ -214,10 +214,11 @@ TRAIN_CFG = TraceConfig(n_requests=1000, rate=RATE_4X8, seed=11,
 
 
 @pytest.fixture(scope="module")
-def head():
-    """One small trained ProD-D head shared by the refresh tests."""
-    return fit_trace_head(TRAIN_CFG, n_train=400, r=6, n_bins=16, hidden=32,
-                          seed=5)
+def head(shared_head):
+    """The session-scoped ProD-D head (conftest ``shared_head``) — identical
+    weights to ``fit_trace_head(TRAIN_CFG, n_train=400, r=6, n_bins=16,
+    hidden=32, seed=5)`` since the fit ignores the trace pattern/seed."""
+    return shared_head
 
 
 class TestRefresh:

@@ -372,3 +372,221 @@ class TestPagedAllocator:
         assert not kv.can_admit(1)            # the 4 leftover tokens unusable
         kv.release(0)
         assert not kv.admit(1, 97)            # needs 7 pages, pool holds 6
+
+
+# ---------------------------------------------------------------------------
+# posterior re-reservation (reprice): differential shadow model
+# ---------------------------------------------------------------------------
+
+
+class _ShadowPagedKV:
+    """Brute-force page-accounting model of the non-sharing paged allocator,
+    including the posterior-refinement ``reprice`` primitive — independent
+    arithmetic (plain per-rid page counts plus a free counter, re-derived
+    sums instead of incremental books) so the real manager's decisions and
+    counters can be pinned against it op for op."""
+
+    def __init__(self, budget_tokens, page_size):
+        self.page_size = page_size
+        self.pages_total = budget_tokens // page_size
+        self.free = self.pages_total
+        self.granted = {}                     # rid -> pages
+        self.asked = {}                       # rid -> tokens
+
+    def _pages(self, n):
+        return -(-int(n) // self.page_size)
+
+    @property
+    def reserved_now(self):
+        return sum(self.granted.values()) * self.page_size
+
+    def admit(self, rid, n):
+        k = self._pages(n)
+        if k > self.free:
+            return False
+        self.free -= k
+        self.granted[rid] = k
+        self.asked[rid] = n
+        return True
+
+    def grow(self, rid, extra):
+        want = self.asked[rid] + extra
+        delta = max(self._pages(want), self.granted[rid] + 1) \
+            - self.granted[rid]
+        if delta > self.free:
+            return False
+        self.free -= delta
+        self.granted[rid] += delta
+        self.asked[rid] = want
+        return True
+
+    def shrink(self, rid, keep_tokens):
+        keep = min(max(0, int(keep_tokens)),
+                   self.granted[rid] * self.page_size)
+        k = self._pages(keep)
+        self.free += self.granted[rid] - k
+        self.granted[rid] = k
+        self.asked[rid] = keep
+        return k * self.page_size
+
+    def reserve(self, rid, n):
+        if rid not in self.granted:
+            return self.admit(rid, n)
+        want = max(int(n), self.asked[rid])
+        delta = self._pages(want) - self.granted[rid]
+        if delta > self.free:
+            return False
+        self.free -= delta
+        self.granted[rid] += delta
+        self.asked[rid] = want
+        return True
+
+    def reprice(self, rid, n):
+        if rid not in self.granted:
+            return False
+        want = max(0, int(n))
+        k = self._pages(want)
+        if k < self.granted[rid]:
+            return self.shrink(rid, want) >= want
+        if k > self.granted[rid]:
+            if self._pages(max(want, self.asked[rid])) \
+                    - self.granted[rid] > self.free:
+                return False
+            return self.reserve(rid, want)
+        return True
+
+    def release(self, rid):
+        self.free += self.granted.pop(rid, 0)
+        self.asked.pop(rid, None)
+
+
+def _apply_refine_ops(rng, n_ops, kv, shadow):
+    """Random request stream over the refinement op vocabulary — admit /
+    grow / shrink (preempt-keep) / reserve (resume) / reprice (posterior
+    re-cut, up and down) / release — applied to the real manager and the
+    shadow model in lockstep, asserting identical decisions."""
+    live, holding = [], []
+    next_rid = 0
+    for _ in range(n_ops):
+        op = int(rng.integers(0, 7))
+        if op == 0:                                   # admit
+            need = int(rng.integers(1, kv.budget_tokens // 2))
+            got = kv.admit(next_rid, need)
+            assert shadow.admit(next_rid, need) == got
+            if got:
+                live.append(next_rid)
+            next_rid += 1
+        elif op == 1 and live:                        # grow (overflow)
+            rid = live[int(rng.integers(0, len(live)))]
+            extra = int(rng.integers(1, 200))
+            assert shadow.grow(rid, extra) == kv.grow(rid, extra)
+        elif op == 2 and live:                        # keep-mode preempt
+            rid = live.pop(int(rng.integers(0, len(live))))
+            keep = int(rng.integers(0, kv.asked[rid] + 1))
+            assert shadow.shrink(rid, keep) == kv.shrink(rid, keep)
+            holding.append(rid)
+        elif op == 3 and holding:                     # delta resume
+            rid = holding.pop(int(rng.integers(0, len(holding))))
+            need = kv.asked[rid] + int(rng.integers(0, 300))
+            got = kv.reserve(rid, need)
+            assert shadow.reserve(rid, need) == got
+            (live if got else holding).append(rid)
+        elif op == 4 and live:                        # posterior re-cut
+            rid = live[int(rng.integers(0, len(live)))]
+            want = int(rng.integers(1, kv.budget_tokens + 100))
+            assert shadow.reprice(rid, want) == kv.reprice(rid, want)
+        elif op == 5 and (live or holding):           # release / timeout
+            pool = live if live and (not holding or rng.integers(0, 2)) \
+                else holding
+            rid = pool.pop(int(rng.integers(0, len(pool))))
+            kv.release(rid)
+            shadow.release(rid)
+        else:
+            kv.tick()
+        yield kv, shadow, live, holding
+
+
+class TestRepriceDifferential:
+    @given(st.integers(0, 100_000), st.sampled_from([1, 7, 16, 64]))
+    def test_reprice_matches_shadow_and_strands_no_pages(self, seed,
+                                                         page_size):
+        """Decision-for-decision, book-for-book equivalence with the
+        brute-force model across random refine streams; afterwards a full
+        release drain returns every page — shrink-on-refine never strands
+        pages and the ``reserved_now``/``logical_now`` books balance."""
+        rng = np.random.default_rng(seed)
+        kv = KVCacheManager(budget_tokens=960, page_size=page_size,
+                            track_pages=True)
+        shadow = _ShadowPagedKV(960, page_size)
+        for kv, shadow, live, holding in _apply_refine_ops(rng, 90, kv,
+                                                           shadow):
+            assert kv.reserved_now == shadow.reserved_now
+            assert kv.logical_now == kv.reserved_now   # no sharing
+            assert kv.pages_free == shadow.free
+            assert kv.asked == shadow.asked
+            for rid, k in shadow.granted.items():
+                assert kv.reserved[rid] == k * page_size
+            owned = [p for tbl in kv.page_table.values() for p in tbl]
+            assert len(owned) == len(set(owned))
+            assert len(owned) + len(kv._free_ids) == kv.pages_total
+        for rid in list(kv.reserved):
+            kv.release(rid)
+        assert kv.reserved_now == 0 and kv.logical_now == 0
+        assert kv.pages_free == kv.pages_total
+        assert kv.page_table == {}
+
+    @given(st.integers(0, 100_000), st.sampled_from([1, 7, 16, 64]))
+    def test_reprice_grow_iff_can_reserve(self, seed, page_size):
+        """Grow-on-refine respects admission feasibility exactly: whenever
+        the posterior target needs new pages, ``reprice`` succeeds iff
+        ``can_reserve`` says the delta fits, and a refused grow leaves the
+        reservation untouched."""
+        import copy
+
+        rng = np.random.default_rng(seed)
+        kv = KVCacheManager(budget_tokens=960, page_size=page_size)
+        shadow = _ShadowPagedKV(960, page_size)
+        for kv, shadow, live, holding in _apply_refine_ops(rng, 60, kv,
+                                                           shadow):
+            if not live:
+                continue
+            rid = live[int(rng.integers(0, len(live)))]
+            want = int(rng.integers(1, kv.budget_tokens + 200))
+            if kv.pages_for(want) <= kv.pages_of(rid):
+                continue                      # shrink/no-op side: always ok
+            feasible = kv.can_reserve(rid, want)
+            snapshot = (kv.reserved_now, dict(kv.reserved), dict(kv.asked),
+                        kv.overflow_events)
+            got = kv.reprice(rid, want)
+            assert got == feasible
+            assert shadow.reprice(rid, want) == got
+            if got:
+                assert kv.reserved[rid] >= want
+                assert kv.overflow_events == snapshot[3]  # not an overflow
+            else:
+                assert (kv.reserved_now, dict(kv.reserved), dict(kv.asked),
+                        kv.overflow_events) == snapshot
+
+    def test_reprice_never_releases_shared_prefix_pages(self):
+        """With prefix sharing on, a posterior shrink below the shared-token
+        floor keeps the prefix-backed pages (they belong to the prefix
+        store) and the physical/logical books stay split correctly."""
+        kv = KVCacheManager(budget_tokens=512, page_size=16,
+                            share_prefixes=True)
+        assert kv.admit(0, 128, prefix_id="s", prefix_len=64)
+        assert kv.admit(1, 128, prefix_id="s", prefix_len=64)
+        shared = kv.shared_tokens_of(0)
+        assert shared == 64
+        logical_before = kv.logical_now
+        assert kv.reprice(0, 8)               # far below the shared floor
+        assert kv.reserved[0] >= shared
+        assert kv.logical_now < logical_before
+        assert kv.reserved_now <= kv.capacity_tokens
+        kv.release(0)
+        kv.release(1)
+        assert kv.reserved_now == 0 and kv.logical_now == 0
+
+    def test_reprice_unknown_rid_is_refused(self):
+        kv = KVCacheManager(budget_tokens=256, page_size=16)
+        assert not kv.reprice(42, 64)
+        assert kv.reserved_now == 0 and kv.pages_free == kv.pages_total

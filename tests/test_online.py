@@ -57,3 +57,93 @@ def test_evaluate_by_progress_buckets():
                                       static_total_pred=np.full(len(rem), 20.0))
     assert rep["online"] and rep["static"]
     assert sum(rep["count"].values()) == len(rem)
+
+
+# ---------------------------------------------------------------------------
+# PosteriorRefiner edge cases (mid-flight refinement)
+# ---------------------------------------------------------------------------
+
+
+EDGES = np.array([0.0, 8.0, 32.0, 128.0, 512.0])
+
+
+@pytest.mark.parametrize("t", [0, 0.0])
+def test_refiner_t_zero_is_identity(t):
+    """At t = 0 truncation removes nothing: the conditional equals the
+    dispatch histogram exactly (edge[0] = 0, so no partial first bin)."""
+    rz = online.PosteriorRefiner(EDGES)
+    p = np.array([0.4, 0.3, 0.2, 0.1])
+    np.testing.assert_allclose(rz.condition(p, t), p, atol=1e-15)
+    assert rz.survivor(p, t) == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("t", [512.0, 513.0, 1e6])
+def test_refiner_past_support_is_point_mass_at_cap(t):
+    """t at/past the last edge: an explicit degenerate point mass at the
+    cap — finite quantiles of max(cap, t+1), never a NaN-prone renorm."""
+    rz = online.PosteriorRefiner(EDGES)
+    p = np.array([0.4, 0.3, 0.2, 0.1])
+    cond = rz.condition(p, t)
+    assert not np.any(np.isnan(cond))
+    assert cond[-1] == 1.0 and np.all(cond[:-1] == 0.0)
+    qs = rz.quantiles(p, t, (0.1, 0.5, 0.99))
+    assert np.all(qs == max(512.0, t + 1.0))
+    assert np.all(np.isfinite(qs))
+
+
+def test_refiner_past_last_nonzero_bin():
+    """t beyond every bin that carries mass (but inside the support) is
+    degenerate too — zero survivor mass must not divide by ~0."""
+    rz = online.PosteriorRefiner(EDGES)
+    p = np.array([0.5, 0.5, 0.0, 0.0])      # support ends at 32
+    cond = rz.condition(p, 200.0)
+    assert not np.any(np.isnan(cond))
+    assert cond[-1] == 1.0
+    assert rz.quantile(p, 200.0, 0.5) == 512.0
+
+
+def test_refiner_single_bin_histogram():
+    """A one-bin distribution (and a one-bin edge array) stays proper and
+    interpolates within the bin."""
+    rz = online.PosteriorRefiner(np.array([0.0, 64.0]))
+    p = np.array([1.0])
+    np.testing.assert_allclose(rz.condition(p, 16.0), [1.0])
+    q = rz.quantile(p, 16.0, 0.5)
+    assert 16.0 <= q <= 64.0
+    # survivor shrinks linearly inside the uniform bin
+    assert rz.survivor(p, 32.0) == pytest.approx(0.5)
+
+
+def test_refiner_quantiles_respect_cap_override():
+    """A cap above the last edge (max_seq_len > bin_max) widens the
+    degenerate clamp, and quantiles never exceed max(cap, t+1)."""
+    rz = online.PosteriorRefiner(EDGES, cap=1024.0)
+    p = np.array([0.4, 0.3, 0.2, 0.1])
+    assert rz.quantile(p, 600.0, 0.5) == 1024.0
+    assert rz.quantile(p, 2000.0, 0.5) == 2001.0
+    assert rz.quantile(p, 4.0, 0.99) <= 1024.0
+
+
+def test_refiner_mass_conservation_vs_survivor():
+    """The normalized conditional times the survivor recovers the truncated
+    mass: condition() and survivor() agree on the same uniform-in-bin
+    truncation model."""
+    rz = online.PosteriorRefiner(EDGES)
+    p = np.array([0.25, 0.25, 0.25, 0.25])
+    for t in (4.0, 20.0, 100.0, 300.0):
+        s = rz.survivor(p, t)
+        np.testing.assert_allclose(rz.condition(p, t) * s,
+                                   rz._mass(p, t), atol=1e-12)
+        assert 0.0 < s < 1.0
+
+
+def test_hazard_table_row_lookup_floors():
+    """Grid lookup floors to the last grid point ≤ t and clamps at both
+    ends — refine ticks between grid points reuse the earlier row."""
+    hz = online.HazardTable(ts=np.array([0.0, 32.0, 128.0]),
+                            probs=np.eye(3), prior=np.full(3, 1 / 3))
+    np.testing.assert_array_equal(hz.row(-5.0), hz.probs[0])
+    np.testing.assert_array_equal(hz.row(0.0), hz.probs[0])
+    np.testing.assert_array_equal(hz.row(31.9), hz.probs[0])
+    np.testing.assert_array_equal(hz.row(32.0), hz.probs[1])
+    np.testing.assert_array_equal(hz.row(1e9), hz.probs[2])

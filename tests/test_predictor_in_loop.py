@@ -13,8 +13,7 @@ from repro.serving.arrivals import (LatentOracle, TraceConfig, corrupt_latents,
                                     make_trace)
 from repro.serving.cluster import Cluster
 from repro.serving.engine import ReplicaSpec, SimEngine
-from repro.serving.predictor import (PerfectOracle, PredictorService,
-                                     fit_trace_head)
+from repro.serving.predictor import PerfectOracle, PredictorService
 from repro.serving.request import Request
 from repro.serving.scheduler import (ORDERINGS, Policy, order_key,
                                      quantile_remaining)
@@ -31,10 +30,11 @@ def trace():
 
 
 @pytest.fixture(scope="module")
-def head():
-    """One small trained ProD-D head shared by every test in the module."""
-    return fit_trace_head(TRACE_CFG, n_train=400, r=6, n_bins=16, hidden=32,
-                          seed=5)
+def head(shared_head):
+    """The session-scoped ProD-D head (conftest ``shared_head``) — identical
+    weights to ``fit_trace_head(TRACE_CFG, n_train=400, r=6, n_bins=16,
+    hidden=32, seed=5)`` since the fit ignores the trace pattern/seed."""
+    return shared_head
 
 
 def _svc(head, **kw):
