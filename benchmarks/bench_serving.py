@@ -43,6 +43,7 @@ the ROADMAP asks for.
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -58,6 +59,7 @@ from repro.serving.predictor import (PerfectOracle, PredictorService,
                                      fit_trace_head)
 from repro.serving.request import workload_from_scenario
 from repro.serving.scheduler import Policy
+from repro.serving.telemetry import Tracer
 
 
 def make_oracle(cfg: TraceConfig) -> LatentOracle:
@@ -1085,15 +1087,126 @@ def validate_cluster_adaptation(rows, target=0.9) -> dict:
     }
 
 
-def _write_stamp(path, tables, **meta):
+# ---------------------------------------------------------------------------
+# observability smoke: tracer inertness, path equality, artifact export
+# ---------------------------------------------------------------------------
+
+
+def run_obs(n_requests=8000, n_replicas=4, max_slots=32, pattern="bursty",
+            seed=0, out_dir=".", verbose=True):
+    """Telemetry smoke table: replay one traced cluster on both decode paths
+    plus an untraced control, then export the Perfetto/Prometheus/JSON
+    artifacts from the vectorized trace. The three runs pin the telemetry
+    contract end to end — tracing must not perturb the simulation
+    (control == traced rows), the reference and event-leap paths must emit
+    the same canonical event stream, and the event log must conserve
+    requests (every arrival reaches exactly one terminal event)."""
+    n_requests = min(int(n_requests), 8000)   # the ref path steps every tick
+    probe = make_trace(TraceConfig(n_requests=2000, rate=1.0, seed=seed))
+    rate = stable_rate(n_replicas, max_slots, mean_true_length(probe), 0.7)
+    cfg = TraceConfig(n_requests=n_requests, rate=rate, pattern=pattern,
+                      model="mix", scenario="mix", seed=seed,
+                      slo_factor=3.0, slo_floor=80.0)
+    reqs = make_trace(cfg)
+    if not reqs:
+        print("empty trace (n_requests=0): nothing to replay")
+        return []
+    kv_budget = 8 * (256 + 4096)
+    oracle = make_oracle(cfg)
+    pol = Policy("srtf_pred", "quantile", quantile=0.9, preempt=True,
+                 preempt_factor=1.5, preempt_mode="keep")
+    rows, tracers = [], {}
+    for label, vec, tracer in (("control", True, None),
+                               ("vec", True, Tracer(sample_every=32)),
+                               ("ref", False, Tracer(sample_every=32))):
+        t0 = time.time()
+        cl = Cluster.uniform(n_replicas, max_slots, kv_budget, pol,
+                             router="psq", predictor=oracle,
+                             rebalance_every=64, steal="quantile",
+                             admission=AdmissionController(slack=0.9,
+                                                           tracer=tracer),
+                             vectorized=vec, tracer=tracer)
+        st = cl.run(reqs)
+        dt = time.time() - t0
+        row = st.row()
+        row.update(path=label, seconds=dt,
+                   events=tracer.emitted if tracer else 0,
+                   samples=len(tracer.series) if tracer else 0)
+        rows.append(row)
+        if tracer is not None:
+            tracers[label] = tracer
+        if verbose:
+            print(f"  {label:8s} p99 {st.p99_latency:9.1f} "
+                  f"goodput {st.goodput:8.2f} events {row['events']:7d} "
+                  f"samples {row['samples']:5d} {dt:6.1f}s")
+    tr = tracers["vec"]
+    # cross-run facts the validator needs but a single row can't see
+    rows[1]["_events_equal"] = (tr.canonical()
+                                == tracers["ref"].canonical())
+    rows[1]["_terminal"] = dict(tr.terminal_counts())
+    os.makedirs(out_dir, exist_ok=True)
+    tr.write_perfetto(os.path.join(out_dir, "trace.json"))
+    with open(os.path.join(out_dir, "metrics.prom"), "w") as f:
+        f.write(tr.to_prometheus())
+    tr.write_summary(os.path.join(out_dir, "summary.json"))
+    if verbose:
+        print(f"  artifacts -> {out_dir}/{{trace.json,metrics.prom,"
+              f"summary.json}}")
+    return rows
+
+
+def validate_obs(rows, n_requests=8000) -> dict:
+    if not rows:
+        return {"empty_trace": True}
+    n_requests = min(int(n_requests), 8000)
+    by = {r["path"]: r for r in rows}
+
+    def core(r):
+        return {k: v for k, v in r.items() if not k.startswith("_")
+                and k not in ("path", "seconds", "events", "samples")}
+
+    term = by["vec"].get("_terminal", {})
+    accounted = (term.get("finish", -1) == by["vec"]["completed"]
+                 and term.get("timeout", -1) == by["vec"]["timed_out"]
+                 and term.get("rejected", -1) == by["vec"]["rejected"]
+                 and sum(term.values()) == n_requests)
+    return {
+        "tracer_off_inert": core(by["control"]) == core(by["vec"]),
+        "paths_bitexact_rows": core(by["vec"]) == core(by["ref"]),
+        "paths_bitexact_events": by["vec"].get("_events_equal", False),
+        "all_accounted": accounted,
+        "events_emitted": by["vec"]["events"] > 0,
+        "series_sampled": by["vec"]["samples"] > 0,
+        "replay_under_120s": all(r["seconds"] < 120.0 for r in rows),
+    }
+
+
+def _git_sha():
+    """Best-effort current commit SHA for stamp provenance ("unknown" when
+    git is unavailable — e.g. a source tarball)."""
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def _write_stamp(path, tables, timestamp=None, **meta):
     """Stamp bench rows + validation checks to ``path`` (JSON). The file is
     the start of the serving perf trajectory: each entry is one table's raw
     rows and its ``validate_*`` booleans/metrics, keyed by table name, plus
-    the run metadata needed to reproduce it. Tables already stamped in an
-    existing file are preserved, so a ``--X-only`` run refreshes one table
+    a ``meta`` block (config knobs, git SHA, caller-supplied timestamp)
+    recording the provenance ``check_regression.py`` keys its diff on.
+    Tables already stamped in an existing file are preserved, and meta is
+    merged non-destructively (existing keys survive unless this run supplies
+    a new value — a ``--X-only`` refresh must not erase the provenance of
+    the tables it did not rerun), so a partial run refreshes one table
     without dropping the rest of the trajectory."""
     import json
-    import os
 
     def scrub(x):
         if isinstance(x, dict):
@@ -1108,35 +1221,63 @@ def _write_stamp(path, tables, **meta):
             return bool(x)
         return x
 
-    merged = {}
+    merged, old_meta = {}, {}
     if os.path.exists(path):
         try:
             with open(path) as f:
-                merged = json.load(f).get("tables", {})
+                prior = json.load(f)
+            merged = prior.get("tables", {})
+            old_meta = prior.get("meta", {})
         except (ValueError, OSError):
-            merged = {}
+            merged, old_meta = {}, {}
     merged.update(scrub(tables))
+    new_meta = dict(old_meta)
+    new_meta.update(scrub(meta))
+    new_meta["git_sha"] = _git_sha()
+    if timestamp is not None:
+        # caller-supplied (wall-clock stays out of the bench library so runs
+        # stay replayable); an unstamped refresh keeps the previous one
+        new_meta["timestamp"] = str(timestamp)
     with open(path, "w") as f:
-        json.dump({"meta": scrub(meta), "tables": merged}, f, indent=1,
+        json.dump({"meta": new_meta, "tables": merged}, f, indent=1,
                   sort_keys=True)
     print(f"stamped {len(tables)} table(s) ({len(merged)} total) -> {path}")
 
 
 def main(fast=True, cluster=True, cluster_only=False, adaptation_only=False,
          preemption_only=False, prefix_only=False, chunked_only=False,
-         refine_only=False, n_requests=50_000, n_replicas=4, max_slots=32,
-         pattern="bursty", seed=0, hetero=True, predictors=True,
+         refine_only=False, obs_only=False, n_requests=50_000, n_replicas=4,
+         max_slots=32, pattern="bursty", seed=0, hetero=True, predictors=True,
          adaptation=True, preemption=True, prefix=True, chunked=True,
-         refine=True, stamp=None):
+         refine=True, stamp=None, timestamp=None, obs_dir="obs_artifacts"):
     tables = {}
 
     def finish(name, rows, checks):
         tables[name] = {"rows": rows, "checks": checks}
         if stamp:
-            _write_stamp(stamp, tables, n_requests=n_requests,
+            _write_stamp(stamp, tables, timestamp=timestamp,
+                         n_requests=n_requests,
                          n_replicas=n_replicas, max_slots=max_slots,
                          pattern=pattern, seed=seed)
 
+    if obs_only:
+        orows = run_obs(n_requests=n_requests, n_replicas=n_replicas,
+                        max_slots=max_slots, pattern=pattern, seed=seed,
+                        out_dir=obs_dir)
+        checks = validate_obs(orows, n_requests=n_requests)
+        print("obs checks:", checks)
+        finish("obs", orows, checks)
+        # CI smoke mode is a regression gate: hard-fail on the acceptance
+        # booleans so a telemetry perturbation (tracer-on divergence,
+        # path-dependent event streams, or a leaky event log) turns the
+        # nightly job red
+        hard = ("tracer_off_inert", "paths_bitexact_rows",
+                "paths_bitexact_events", "all_accounted", "events_emitted",
+                "series_sampled", "replay_under_120s")
+        bad = [k for k in hard if not checks.get(k, False)]
+        if bad:
+            raise SystemExit(f"obs acceptance failed: {bad}")
+        return orows
     if refine_only:
         rrows = run_cluster_refine(n_requests=n_requests,
                                    n_replicas=n_replicas, seed=seed)
@@ -1304,9 +1445,19 @@ if __name__ == "__main__":
     ap.add_argument("--refine-only", action="store_true",
                     help="run only the mid-flight posterior-refinement "
                          "table (CI smoke)")
+    ap.add_argument("--obs-only", action="store_true",
+                    help="run only the telemetry smoke table (CI smoke): "
+                         "tracer inertness + path equality + conservation, "
+                         "and export Perfetto/Prometheus/JSON artifacts")
+    ap.add_argument("--obs-dir", metavar="DIR", default="obs_artifacts",
+                    help="directory for --obs-only artifacts "
+                         "(trace.json, metrics.prom, summary.json)")
     ap.add_argument("--stamp", metavar="PATH", default=None,
                     help="write rows + validation checks of every table run "
                          "to PATH as JSON (e.g. BENCH_serving.json)")
+    ap.add_argument("--timestamp", default=None,
+                    help="provenance timestamp recorded in the stamp's meta "
+                         "block (caller-supplied, e.g. $(date -uIs))")
     ap.add_argument("--no-hetero", action="store_true",
                     help="skip the heterogeneous x SLO x stealing table")
     ap.add_argument("--no-predictors", action="store_true",
@@ -1331,11 +1482,11 @@ if __name__ == "__main__":
     main(cluster_only=args.cluster_only, adaptation_only=args.adaptation_only,
          preemption_only=args.preemption_only, prefix_only=args.prefix_only,
          chunked_only=args.chunked_only, refine_only=args.refine_only,
-         n_requests=args.n_requests,
+         obs_only=args.obs_only, n_requests=args.n_requests,
          n_replicas=args.n_replicas, max_slots=args.max_slots,
          pattern=args.pattern, seed=args.seed, hetero=not args.no_hetero,
          predictors=not args.no_predictors,
          adaptation=not args.no_adaptation,
          preemption=not args.no_preemption, prefix=not args.no_prefix,
          chunked=not args.no_chunked, refine=not args.no_refine,
-         stamp=args.stamp)
+         stamp=args.stamp, timestamp=args.timestamp, obs_dir=args.obs_dir)

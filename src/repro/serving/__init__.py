@@ -20,13 +20,18 @@ from repro.serving.predictor import (PerfectOracle, PredictorService,
                                      ServiceStats, fit_trace_head)
 from repro.serving.request import Request, workload_from_scenario
 from repro.serving.scheduler import ORDERINGS, PREEMPT_MODES, Policy
+from repro.serving.telemetry import (EVENT_KINDS, TERMINAL_KINDS, TraceEvent,
+                                     Tracer, goodput, latency_summary,
+                                     percentile_summary, ttft_summary)
 
 __all__ = [
     "AdaptationConfig", "AdmissionController", "Cluster", "ClusterStats",
-    "DriftSpec", "KVCacheManager", "LatentOracle", "ORDERINGS",
+    "DriftSpec", "EVENT_KINDS", "KVCacheManager", "LatentOracle", "ORDERINGS",
     "OnlineAdapter", "PREEMPT_MODES", "PerfectOracle", "Policy",
     "PredictorService", "ROUTERS", "ReplicaSpec", "Request", "STEAL_MODES",
-    "ServeStats", "ServiceStats", "SimEngine", "TraceConfig",
-    "corrupt_latents", "coverage_of", "fit_trace_head", "make_trace",
-    "refit_head", "stable_rate_specs", "workload_from_scenario",
+    "ServeStats", "ServiceStats", "SimEngine", "TERMINAL_KINDS",
+    "TraceConfig", "TraceEvent", "Tracer", "corrupt_latents", "coverage_of",
+    "fit_trace_head", "goodput", "latency_summary", "make_trace",
+    "percentile_summary", "refit_head", "stable_rate_specs", "ttft_summary",
+    "workload_from_scenario",
 ]

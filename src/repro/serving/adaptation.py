@@ -180,9 +180,11 @@ class OnlineAdapter:
     reserved.
     """
 
-    def __init__(self, base, cfg: AdaptationConfig = AdaptationConfig()):
+    def __init__(self, base, cfg: AdaptationConfig = AdaptationConfig(),
+                 tracer=None):
         self.base = base
         self.cfg = cfg
+        self.tracer = tracer
         # snapshot the pristine weights: refreshes swap new predictors into
         # the live service, and a later run must not silently start from
         # run 1's refreshed head (Cluster.run guarantees deterministic
@@ -300,7 +302,8 @@ class OnlineAdapter:
             return False
         due = (c.refresh_every > 0
                and now - self._last_refresh >= c.refresh_every)
-        if not (due or self.drift_alarmed()):
+        alarmed = self.drift_alarmed()
+        if not (due or alarmed):
             return False
         new = refit_head(self.base.predictor, np.stack(self._buf_phi),
                          np.asarray(self._buf_len), epochs=c.refresh_epochs,
@@ -308,6 +311,9 @@ class OnlineAdapter:
         self.base.swap_weights(new)
         self._last_refresh = float(now)
         self.refreshes += 1
+        if self.tracer is not None:
+            self.tracer.emit(now, -1, -1, "refresh", version=self.refreshes,
+                             alarmed=int(alarmed), buffer=len(self._buf_len))
         self._cov_win.clear()
         self._mae_win.clear()
         self._mae_baseline = None
@@ -341,6 +347,9 @@ class AdmissionController:
     """
 
     slack: float = 1.0
+    # optional telemetry sink — excluded from equality/hash so controllers
+    # with and without tracing still compare equal on their policy knob
+    tracer: object = dataclasses.field(default=None, repr=False, compare=False)
 
     def __post_init__(self):
         if self.slack <= 0:
@@ -348,6 +357,10 @@ class AdmissionController:
 
     def admit(self, req: Request, engine, spec, now: float) -> bool:
         if req.deadline is None:
+            if self.tracer is not None:
+                self.tracer.emit(now, getattr(engine, "replica_id", -1),
+                                 req.rid, "admission", ok=1, eta=float(now),
+                                 deadline=-1.0)
             return True
         work = float(req.reserve_len) if req.reserve_len is not None \
             else quantile_remaining(req)
@@ -368,4 +381,9 @@ class AdmissionController:
             prefill = float(-(-int(req.prompt_len) // pts)) if pts > 0 else 0.0
         wait = engine.predicted_backlog() / spec.service_rate
         eta = now + self.slack * (wait + prefill + decode)
-        return eta <= float(req.deadline)
+        ok = eta <= float(req.deadline)
+        if self.tracer is not None:
+            self.tracer.emit(now, getattr(engine, "replica_id", -1), req.rid,
+                             "admission", ok=int(ok), eta=float(eta),
+                             deadline=float(req.deadline))
+        return ok

@@ -180,7 +180,7 @@ class Cluster:
                  router: str = "round_robin", predictor=None,
                  vectorized: bool = True, rebalance_every: int = 0,
                  steal: str = "tail", steal_cost: int = 0, admission=None,
-                 prefix_imbalance: float = 8.0, refiner=None):
+                 prefix_imbalance: float = 8.0, refiner=None, tracer=None):
         if router not in ROUTERS:
             raise ValueError(f"router {router!r} not in {ROUTERS}")
         if steal not in STEAL_MODES:
@@ -208,11 +208,17 @@ class Cluster:
         self.steal_pages = 0
         self.rejected_requests: List[Request] = []
         self.refiner = refiner
+        # optional telemetry, shared with every replica engine: the cluster
+        # emits dispatch-level events (arrival/routed/rejected/stolen) and
+        # fleet gauge rows; engines emit slot-level events + per-replica rows
+        self.tracer = tracer
         self.engines = [
             SimEngine(policy=policy, predictor=None, vectorized=vectorized,
-                      spec=spec, refiner=refiner)
+                      spec=spec, refiner=refiner, tracer=tracer)
             for spec in specs
         ]
+        for i, e in enumerate(self.engines):
+            e.replica_id = i
         self._rr = 0
         self._done_seen = [0] * self.n_replicas
 
@@ -320,15 +326,18 @@ class Cluster:
             pages = held_pages if t_eng.adopt_held(r) \
                 else d_eng.kv.pages_for(r.prompt_len)
             self.steal_pages += pages
+            delay = self.steal_cost * pages
             if self.steal_cost > 0:
                 # migration isn't free: the stolen entry only becomes
                 # runnable on the thief after a delay proportional to the
                 # KV pages it moves (steal_cost ticks per page)
-                delay = self.steal_cost * pages
                 t_eng.submit([r], after=t_eng.t + delay)
                 self.steal_delay += delay
             else:
                 t_eng.submit([r])
+            if self.tracer is not None:
+                self.tracer.emit(t_eng.t, thief, r.rid, "stolen", frm=donor,
+                                 pages=int(pages), delay=int(delay))
         self.stolen += len(moved)
 
     # -- adaptation feedback (closed loop) -----------------------------------
@@ -373,6 +382,9 @@ class Cluster:
         t = 0.0     # advances in unit ticks (plus integer leaps) from 0.0
         next_reb = self.rebalance_every if self.rebalance_every > 0 else None
         next_adapt = float(adapter.cfg.every) if adapter is not None else None
+        tracer = self.tracer
+        next_obs = float(tracer.sample_every) \
+            if tracer is not None and tracer.sample_every else None
         ptr, n = 0, len(reqs)
         while True:
             batch = []
@@ -385,6 +397,8 @@ class Cluster:
                     # adapter's CURRENT calibration and weights
                     adapter.annotate(batch, self.policy)
                 for r in batch:
+                    if tracer is not None:
+                        tracer.emit(r.arrival, -1, r.rid, "arrival")
                     i = self._route(r)
                     if (self.admission is not None
                             and not self.admission.admit(
@@ -394,8 +408,12 @@ class Cluster:
                             # not burn the rotation slot either
                             self._rr = (self._rr - 1) % self.n_replicas
                         self.rejected_requests.append(r)
+                        if tracer is not None:
+                            tracer.emit(t, i, r.rid, "rejected")
                         continue
                     r.replica = i
+                    if tracer is not None:
+                        tracer.emit(t, i, r.rid, "routed", to=i)
                     self.engines[i].submit([r])
             if next_adapt is not None and t >= next_adapt:
                 adapter.observe(self._harvest_done())
@@ -404,6 +422,11 @@ class Cluster:
             if next_reb is not None and t >= next_reb:
                 self._rebalance()
                 next_reb += self.rebalance_every
+            if next_obs is not None and t >= next_obs:
+                # fleet-level gauge row (replica = -1) each sample tick; the
+                # per-engine rows fire inside each engine's own step()
+                tracer.sample_cluster(self, t)
+                next_obs += tracer.sample_every
             if ptr >= n and all(e.idle for e in self.engines):
                 break
             if t >= max_steps:
@@ -423,6 +446,8 @@ class Cluster:
                     k = min(k, max(1.0, float(next_reb) - t))
                 if next_adapt is not None:
                     k = min(k, max(1.0, float(next_adapt) - t))
+                if next_obs is not None:
+                    k = min(k, max(1.0, float(next_obs) - t))
                 q = int(min(k - 1, max(max_steps - t - 1, 0)))
                 if q > 0:
                     for e in self.engines:

@@ -41,6 +41,12 @@ from repro.serving.kvcache import KVCacheManager
 from repro.serving.request import Request
 from repro.serving.scheduler import (Policy, annotate_predictions, order_key,
                                      predicted_remaining, quantile_remaining)
+# shared percentile summarization lives in telemetry (one implementation for
+# ServeStats and ClusterStats); the underscore aliases keep the historical
+# engine-module import surface working
+from repro.serving.telemetry import goodput as _goodput
+from repro.serving.telemetry import latency_summary as _latency_stats
+from repro.serving.telemetry import ttft_summary as _ttft_stats
 
 
 @dataclass(frozen=True)
@@ -170,43 +176,6 @@ class ServeStats:
         return self.__dict__.copy()
 
 
-def _latency_stats(done: List[Request]) -> dict:
-    lat = np.array([r.latency for r in done])
-    waits = np.array([r.wait for r in done])
-    if len(lat) == 0:
-        inf = float("inf")
-        return dict(mean_latency=inf, p50_latency=inf, p90_latency=inf,
-                    p99_latency=inf, mean_wait=inf)
-    return dict(
-        mean_latency=float(lat.mean()),
-        p50_latency=float(np.quantile(lat, 0.5)),
-        p90_latency=float(np.quantile(lat, 0.9)),
-        p99_latency=float(np.quantile(lat, 0.99)),
-        mean_wait=float(waits.mean()),
-    )
-
-
-def _ttft_stats(done: List[Request]) -> dict:
-    """Time-to-first-token percentiles over completed requests. Degenerate
-    zero-length requests never emit, so they carry no TTFT sample."""
-    ttft = np.array([r.t_first_token - r.arrival for r in done
-                     if r.t_first_token is not None])
-    if len(ttft) == 0:
-        inf = float("inf")
-        return dict(mean_ttft=inf, p50_ttft=inf, p90_ttft=inf, p99_ttft=inf)
-    return dict(
-        mean_ttft=float(ttft.mean()),
-        p50_ttft=float(np.quantile(ttft, 0.5)),
-        p90_ttft=float(np.quantile(ttft, 0.9)),
-        p99_ttft=float(np.quantile(ttft, 0.99)),
-    )
-
-
-def _goodput(done: List[Request], makespan: float) -> float:
-    toks = sum(r.true_len for r in done if r.slo_met)
-    return toks / max(makespan, 1.0)
-
-
 class SimEngine:
     """Discrete-event continuous-batching simulator (one replica).
 
@@ -244,7 +213,7 @@ class SimEngine:
                  kv_budget: Optional[int] = None,
                  policy: Optional[Policy] = None, predictor=None,
                  vectorized: bool = True, spec: Optional[ReplicaSpec] = None,
-                 refiner=None):
+                 refiner=None, tracer=None):
         if spec is None:
             if max_slots is None or kv_budget is None:
                 raise ValueError(
@@ -278,6 +247,15 @@ class SimEngine:
                                                         or 0),
                           spec.step_token_budget or 0)
         self._atomic = spec.prefill_chunk_tokens == 0
+        # optional telemetry (repro.serving.telemetry.Tracer): every hook is
+        # an `if tracer is not None` read-only branch, so tracer=None stays
+        # bit-identical to a tracer-less build (golden-pinned). Gauge sample
+        # ticks are evented (like refine ticks), so both decode paths sample
+        # identical state at identical ticks.
+        self.tracer = tracer
+        self.replica_id = 0     # a Cluster labels its engines 0..N-1
+        self._sample_every = int(tracer.sample_every) \
+            if tracer is not None else 0
         self.reset()
 
     # -- lifecycle -----------------------------------------------------------
@@ -303,6 +281,9 @@ class SimEngine:
         # refine_every); kept a pure function of t so both decode paths and
         # idle skips land on identical refine ticks
         self._next_refine = float(self._refine_every) if self._refine_every \
+            else np.inf
+        # next gauge-sample tick (pure function of t, like _next_refine)
+        self._next_sample = float(self._sample_every) if self._sample_every \
             else np.inf
         self._held_tokens = 0       # Σ tokens held by preempted waiters here
         self._held_ready = 0        # the ready-queue (releasable) part
@@ -589,6 +570,9 @@ class SimEngine:
                 self._pop_ready()
                 self._drop_held(r)
                 self.dropped += 1
+                if self.tracer is not None:
+                    self.tracer.emit(self.t, self.replica_id, r.rid,
+                                     "dropped", need=need)
                 continue
             if r.deadline is None or r.deadline >= self.t:
                 break
@@ -596,6 +580,9 @@ class SimEngine:
             self._drop_held(r)
             self.timed_out += 1
             self._timed_out.append(r)
+            if self.tracer is not None:
+                self.tracer.emit(self.t, self.replica_id, r.rid, "timeout",
+                                 deadline=float(r.deadline))
 
     def _drop_held(self, r: Request):
         """Release the pages a departing (timed-out/dropped/stall-broken)
@@ -619,6 +606,7 @@ class SimEngine:
             if r.held == 0 or r is spare:
                 continue
             before = self._queue_need(r)
+            freed = r.held
             self.kv.release(r.rid)
             self._held_tokens -= r.held
             self._held_ready -= r.held
@@ -626,6 +614,9 @@ class SimEngine:
             self._ready_need += self._queue_need(r) - before
             self.held_releases += 1
             released += 1
+            if self.tracer is not None:
+                self.tracer.emit(self.t, self.replica_id, r.rid,
+                                 "held_release", tokens=int(freed))
             if max_n is not None and released >= max_n:
                 break
             if (spare is not None
@@ -680,6 +671,12 @@ class SimEngine:
                 cand.held = 0
             self._used_sum += int(self._a_used[i]) - int(self._a_shared[i])
             self._n_active += 1
+            if self.tracer is not None:
+                self.tracer.emit(
+                    self.t, self.replica_id, cand.rid, "admitted",
+                    grant=int(self._a_res[i]),
+                    pf=int(self._a_pref[i]) or int(self._a_pftok[i]),
+                    resumed=int(cand.generated > 0))
             self._expire_ready_head()
 
     def _maybe_preempt(self):
@@ -710,6 +707,11 @@ class SimEngine:
             self._drop_slot(v)
             self._push_ready(victim)   # resumes later with progress kept
             self.preemptions += 1
+            if self.tracer is not None:
+                self.tracer.emit(
+                    self.t, self.replica_id, victim.rid, "preempted",
+                    kept=int(victim.held),
+                    mode="keep" if victim.held else "recompute")
 
     def _drop_slot(self, i: int):
         """Remove slot i, keeping admission order (stable left shift)."""
@@ -731,6 +733,10 @@ class SimEngine:
         self._used_sum -= int(self._a_used[i]) - int(self._a_shared[i])
         self._drop_slot(i)
         self._done.append(r)
+        if self.tracer is not None:
+            self.tracer.emit(self.t, self.replica_id, r.rid, "finish",
+                             gen=int(r.generated), slo_ok=int(bool(r.slo_met)))
+            self.tracer.observe_residual(r)
 
     def _decode_tick_ref(self):
         """Reference per-slot decode loop (exact sequential semantics)."""
@@ -771,6 +777,9 @@ class SimEngine:
                 continue  # stalled on the reservation, retries next tick
             if r.t_first_token is None:
                 r.t_first_token = self.t
+                if self.tracer is not None:
+                    self.tracer.emit(self.t, self.replica_id, r.rid,
+                                     "first_token")
             self._a_gen[i] += emit
             self._a_used[i] += emit
             self._used_sum += emit
@@ -809,8 +818,14 @@ class SimEngine:
         self._used_sum -= int(self._a_used[v]) - int(self._a_shared[v])
         self._drop_slot(v)
         self.oom_evictions += 1
+        if self.tracer is not None:
+            self.tracer.emit(self.t, self.replica_id, victim.rid,
+                             "oom_evict", ask=float(ask))
         if int(victim.prompt_len + ask) <= victim.prompt_len + victim.generated:
             self.dropped += 1      # unservable: exceeds the entire KV pool
+            if self.tracer is not None:
+                self.tracer.emit(self.t, self.replica_id, victim.rid,
+                                 "dropped", need=int(victim.prompt_len + ask))
             return
         victim.reserve_len = float(ask)
         self._push_ready(victim)
@@ -842,6 +857,9 @@ class SimEngine:
                 r = self._slots[int(i)]
                 if r.t_first_token is None:
                     r.t_first_token = self.t
+                    if self.tracer is not None:
+                        self.tracer.emit(self.t, self.replica_id, r.rid,
+                                         "first_token")
         self._progress = True
         self._a_pref[:n] -= pref
         self._a_gen[:n] += emit
@@ -898,6 +916,11 @@ class SimEngine:
                 left -= take
                 self.prefill_ticks += 1
                 self._progress = True
+                if self.tracer is not None:
+                    self.tracer.emit(self.t, self.replica_id,
+                                     self._slots[j].rid, "prefill_chunk",
+                                     take=int(take),
+                                     left=int(self._a_pftok[j]))
             if self._atomic:
                 left = 0    # non-chunked: a prefill tick pauses decode
         was_pref = {self._slots[j].rid for j in pf}
@@ -933,6 +956,9 @@ class SimEngine:
                 continue
             if r.t_first_token is None:
                 r.t_first_token = self.t
+                if self.tracer is not None:
+                    self.tracer.emit(self.t, self.replica_id, r.rid,
+                                     "first_token")
             self._a_gen[i] += emit
             self._a_used[i] += emit
             self._used_sum += emit
@@ -999,6 +1025,7 @@ class SimEngine:
             r.pred_q = float(work)
             self._a_pred[i] = float(med)
             self.refine_events += 1
+            action = "refresh"      # ordering quantiles only
             if pol.reserve == "quantile":
                 if r.pred_level is None:
                     r.pred_level = rz.level_of(p, r.cal_q) \
@@ -1007,23 +1034,30 @@ class SimEngine:
             elif pol.reserve == "predicted":
                 tgt = float(med) * pol.margin
             else:
-                continue            # max/oracle: reservation not prediction-cut
-            res = float(min(max(tgt, 8.0), pol.max_seq_len))
-            r.reserve_len = res
-            if r.cal_q is not None:
-                r.cal_q = res       # conformal-on-posterior (see docstring)
-            # page-boundary move only: floor at current content + one tick
-            # of headroom so a shrink never forces an immediate grow/overflow
-            want = max(int(r.prompt_len) + int(np.ceil(res)),
-                       int(self._a_used[i]) + sp)
-            cur = self.kv.pages_of(r.rid)
-            if self.kv.reprice(r.rid, want):
-                new = self.kv.pages_of(r.rid)
-                if new < cur:
-                    self.refine_shrinks += 1
-                elif new > cur:
-                    self.refine_grows += 1
-                self._a_res[i] = self.kv.reserved[r.rid]
+                tgt = None          # max/oracle: reservation not prediction-cut
+            if tgt is not None:
+                res = float(min(max(tgt, 8.0), pol.max_seq_len))
+                r.reserve_len = res
+                if r.cal_q is not None:
+                    r.cal_q = res   # conformal-on-posterior (see docstring)
+                # page-boundary move only: floor at current content + one tick
+                # of headroom so a shrink never forces an immediate
+                # grow/overflow
+                want = max(int(r.prompt_len) + int(np.ceil(res)),
+                           int(self._a_used[i]) + sp)
+                cur = self.kv.pages_of(r.rid)
+                if self.kv.reprice(r.rid, want):
+                    new = self.kv.pages_of(r.rid)
+                    if new < cur:
+                        self.refine_shrinks += 1
+                        action = "shrink"
+                    elif new > cur:
+                        self.refine_grows += 1
+                        action = "grow"
+                    self._a_res[i] = self.kv.reserved[r.rid]
+            if self.tracer is not None:
+                self.tracer.emit(self.t, self.replica_id, r.rid, "refine",
+                                 med=float(med), action=action)
 
     def step(self):
         """One engine tick: admit → (preempt) → decode one token per slot."""
@@ -1031,6 +1065,12 @@ class SimEngine:
             self._refine_active()
             self._next_refine = (np.floor(self.t / self._refine_every) + 1.0) \
                 * self._refine_every
+        if self._sample_every and self.t >= self._next_sample:
+            # gauges read pre-admit state; sample ticks are evented (see
+            # ticks_to_event), so both decode paths sample identical state
+            self.tracer.sample_engine(self, self.t)
+            self._next_sample = (np.floor(self.t / self._sample_every) + 1.0) \
+                * self._sample_every
         if (self._n_active == 0 and not self._ready
                 and (not self._future or self._future[0][0] > self.t)):
             self.t += 1.0   # fully idle tick: nothing to admit or decode
@@ -1077,6 +1117,11 @@ class SimEngine:
         :meth:`leap`."""
         k = np.inf
         sp = self.spec.speed
+        if self._sample_every:
+            # gauge-sample ticks are evented even when idle (an idle replica
+            # still reports queue depth / occupancy rows), so a leap never
+            # spans one and both decode paths sample at identical ticks
+            k = min(k, max(1.0, self._next_sample - self.t))
         if self._refine_every and self._n_active:
             # refine ticks are evented (like budget-constrained ticks):
             # leaps never span a posterior refresh, so both decode paths
@@ -1143,11 +1188,16 @@ class SimEngine:
             first = (self._a_gen[:n] == 0) & (add > 0)
             if bool(first.any()):
                 # a decoding slot entering the leap with no output emits its
-                # first token on the span's first tick
+                # first token on the span's first tick; with tracing on, the
+                # event the per-tick loop would emit there is synthesized
+                # from the canonical slot state at this leap boundary
                 for i in np.nonzero(first)[0]:
                     r = self._slots[int(i)]
                     if r.t_first_token is None:
                         r.t_first_token = self.t + 1.0
+                        if self.tracer is not None:
+                            self.tracer.emit(self.t + 1.0, self.replica_id,
+                                             r.rid, "first_token")
             gain = add * q
             self._a_gen[:n] += gain
             self._a_used[:n] += gain
@@ -1181,6 +1231,9 @@ class SimEngine:
         self.reset()
         reqs = [r.fresh_copy() for r in requests]  # defensive copy
         annotate_predictions(reqs, self.predictor, self.policy)
+        if self.tracer is not None:
+            for r in reqs:
+                self.tracer.emit(r.arrival, self.replica_id, r.rid, "arrival")
         self.submit(reqs)
         while not self.idle and self.t < max_steps:
             if self.vectorized:

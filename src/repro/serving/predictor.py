@@ -127,7 +127,7 @@ class PredictorService:
                  cache_size: int = 8192, work_quantile: float = 0.9,
                  attach_hist: bool = True, impl: str = "auto",
                  step_token_budget: Optional[int] = None,
-                 prefill_chunk_tokens: int = 0):
+                 prefill_chunk_tokens: int = 0, tracer=None):
         if window <= 0:
             raise ValueError("window must be positive")
         if max_batch <= 0:
@@ -149,6 +149,7 @@ class PredictorService:
         self.work_quantile = float(work_quantile)
         self.attach_hist = attach_hist
         self.impl = impl
+        self.tracer = tracer
         self.stats = ServiceStats()
         self._cache: "OrderedDict[tuple, tuple]" = OrderedDict()
 
@@ -236,6 +237,8 @@ class PredictorService:
 
     def _annotate_window(self, reqs: List[Request], qs, iq, policy: Policy):
         self.stats.requests += len(reqs)
+        hits0 = self.stats.cache_hits
+        scored0 = self.stats.scored
         keys = []
         misses: List[int] = []
         results: List[Optional[tuple]] = [None] * len(reqs)
@@ -282,6 +285,13 @@ class PredictorService:
             else:
                 rv = float(policy.max_seq_len)
             r.reserve_len = float(min(max(rv, 8.0), policy.max_seq_len))
+        if self.tracer is not None:
+            # one event per fused inference window, keyed to the window's
+            # first arrival (the time the batch formed)
+            self.tracer.emit(float(reqs[0].arrival), -1, -1, "predict",
+                             n=len(reqs),
+                             hits=self.stats.cache_hits - hits0,
+                             scored=self.stats.scored - scored0)
 
     # -- raw predictor protocol (interchangeability) -------------------------
 

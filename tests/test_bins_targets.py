@@ -28,7 +28,10 @@ class TestBins:
         e = B.log_edges(8, 1000.0)
         assert float(e[0]) == 0.0 and float(e[-1]) == pytest.approx(1000.0)
 
-    @given(st.integers(4, 64), st.floats(10.0, 1e5))
+    # K drawn from a fixed grid (not integers(4, 64)): each distinct K is a
+    # fresh XLA executable, so bounding the shapes keeps the sweep cheap
+    # while bin_max still ranges continuously.
+    @given(st.sampled_from((4, 7, 16, 33, 64)), st.floats(10.0, 1e5))
     def test_bin_index_roundtrip(self, K, bin_max):
         e = B.make_edges(K, bin_max)
         centers = B.bin_centers(e)
@@ -81,7 +84,11 @@ class TestTargets:
         p = T.dist_target(L, e)
         np.testing.assert_allclose(np.asarray(p[0]), [0.25, 0.5, 0.0, 0.25])
 
-    @given(st.integers(1, 32), st.integers(2, 64))
+    # (r, K) both set shapes; a fixed grid + fewer examples bounds the
+    # number of distinct compiled executables without narrowing the
+    # covered range (1-sample and 64-bin corners stay in the pool).
+    @settings(deadline=None, max_examples=10)
+    @given(st.sampled_from((1, 2, 7, 32)), st.sampled_from((2, 16, 64)))
     def test_dist_target_normalized(self, r, K):
         rng = np.random.default_rng(0)
         L = jnp.asarray(rng.uniform(1, 500, size=(5, r)))
