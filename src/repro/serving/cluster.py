@@ -101,11 +101,14 @@ class ClusterStats:
     occupancy: float = 0.0         # mean reserved fraction of the fleet pool
     frag_ratio: float = 0.0        # page-rounding slack / reserved integral
     held_peak: int = 0             # Σ per-replica peak held tokens
+    held_steps: float = 0.0        # Σ token-steps held while preempted-queued
+    held_releases: int = 0         # Σ held pages dropped to break stalls
     recompute_ticks: int = 0       # prefill ticks re-paid for preempted work
     # prefix sharing, aggregated over replicas (inert without sharing)
     kv_amplification: float = 1.0  # Σ logical / Σ physical reserved steps
     prefix_hits: int = 0           # admissions that reused shared pages
     cow_copies: int = 0            # divergence-boundary pages privatized
+    prefix_evictions: int = 0      # cached prefixes reclaimed under pressure
     prefill_ticks: int = 0         # prefill ticks actually paid
     prefill_saved_ticks: int = 0   # prefill ticks erased by prefix hits
     shared_peak: int = 0           # Σ per-replica peak shared tokens
@@ -123,7 +126,9 @@ class ClusterStats:
 
     def row(self) -> dict:
         d = self.__dict__.copy()
-        d.pop("replica_rows")
+        # per-replica rows are exported separately (Tracer.sample_cluster /
+        # replica gauge series), not as a flat scalar column
+        d.pop("replica_rows")  # reprolint: disable=stats-exporter-surfacing
         return d
 
 
@@ -509,10 +514,14 @@ class Cluster:
             occupancy=reserved_steps / (max(t, 1.0) * max(capacity, 1)),
             frag_ratio=frag,
             held_peak=sum(e._held_peak for e in self.engines),
+            held_steps=sum(e._held_steps for e in self.engines),
+            held_releases=sum(e.held_releases for e in self.engines),
             recompute_ticks=sum(e.recompute_ticks for e in self.engines),
             kv_amplification=amp,
             prefix_hits=sum(e.kv.prefix_hits for e in self.engines),
             cow_copies=sum(e.kv.cow_copies for e in self.engines),
+            prefix_evictions=sum(e.kv.prefix_evictions
+                                 for e in self.engines),
             prefill_ticks=sum(e.prefill_ticks for e in self.engines),
             prefill_saved_ticks=sum(e.prefill_saved_ticks
                                     for e in self.engines),

@@ -135,7 +135,9 @@ class ServeStats:
     throughput: float              # completed tokens / step
     kv_waste_ratio: float
     overflow_events: int
-    peak_reserved: int
+    # per-replica pool high-water mark; fleet-level pressure is reported as
+    # occupancy, and replica_rows keeps the per-replica peaks
+    peak_reserved: int  # reprolint: disable=stats-cluster-parity
     completed: int
     preemptions: int = 0
     oom_evictions: int = 0
@@ -146,7 +148,9 @@ class ServeStats:
     goodput: float = 0.0           # within-SLO completed tokens / step
     # paged-KV accounting (page_size=1 ⇒ occupancy of the scalar pool,
     # frag_ratio == 0, and the held_* columns are 0 unless preempt_mode="keep")
-    page_size: int = 1
+    # replica identity, not a counter: a heterogeneous fleet has no single
+    # page size — replica_rows carries the per-replica values
+    page_size: int = 1  # reprolint: disable=stats-cluster-parity
     occupancy: float = 0.0         # mean reserved fraction of the pool
     frag_ratio: float = 0.0        # page-rounding slack / reserved integral
     held_peak: int = 0             # peak tokens held by preempted waiters
@@ -846,7 +850,9 @@ class SimEngine:
             # budget mode reaches here only on unconstrained ticks, where the
             # budgeted reference tick and the plain one agree — but route
             # through the budgeted one so the two paths share one code path
-            if self._budget is None:
+            # dispatch guard only: step() performs this same budget dispatch
+            # for the reference path, so the knob is consulted on both
+            if self._budget is None:  # reprolint: disable=dual-path-knob-parity
                 self._decode_tick_ref()
             else:
                 self._decode_tick_budget()
@@ -870,7 +876,10 @@ class SimEngine:
             for off, i in enumerate(np.nonzero(finished)[0]):
                 self._finish_slot(int(i) - off)
 
-    def _decode_tick_budget(self):
+    # budget-constrained ticks are always evented (ticks_to_event returns 1.0
+    # via _budget_constrained), so the leap never spans a tick where the
+    # chunk-allocation knobs below matter — deliberately reference-only
+    def _decode_tick_budget(self):  # reprolint: disable=dual-path-knob-parity
         """One budgeted tick (``step_token_budget`` engines): prefill chunks
         and decode tokens draw from one shared token budget.
 
@@ -1122,7 +1131,9 @@ class SimEngine:
             # still reports queue depth / occupancy rows), so a leap never
             # spans one and both decode paths sample at identical ticks
             k = min(k, max(1.0, self._next_sample - self.t))
-        if self._refine_every and self._n_active:
+        # lookahead mirror of step()'s refine prologue (shared by both decode
+        # paths); the reference path needs no lookahead — it steps every tick
+        if self._refine_every and self._n_active:  # reprolint: disable=dual-path-knob-parity
             # refine ticks are evented (like budget-constrained ticks):
             # leaps never span a posterior refresh, so both decode paths
             # refine at identical ticks and stay bit-exact
@@ -1136,7 +1147,9 @@ class SimEngine:
             # mirror of _expire_ready_head's sharing-aware servability check
             if not self.kv.servable(cand.rid, need, *self._prefix_args(cand)):
                 return 1.0   # unservable-head drop fires next tick
-            if self._n_active < self.max_slots and (
+            # admission lookahead mirrors _admit's slot check (common to both
+            # decode paths); admissions are evented, so leaps never span one
+            if self._n_active < self.max_slots and (  # reprolint: disable=dual-path-knob-parity
                     self.kv.can_reserve(cand.rid, need,
                                         *self._prefix_args(cand))
                     # conservative: the held-pages stall breaker may free
@@ -1146,10 +1159,12 @@ class SimEngine:
             if cand.deadline is not None:
                 # head expires at the first tick with t > deadline
                 k = min(k, max(1.0, np.floor(cand.deadline - self.t) + 1.0))
-            if self.policy.preempt and self._n_active:
+            # preemption lookahead mirrors _maybe_preempt (common prologue of
+            # both decode paths); preemptions are evented ticks
+            if self.policy.preempt and self._n_active:  # reprolint: disable=dual-path-knob-parity
                 n = self._n_active
                 rem = np.maximum(self._a_pred[:n] - self._a_gen[:n], 1.0)
-                if (rem.max() > self.policy.preempt_factor
+                if (rem.max() > self.policy.preempt_factor  # reprolint: disable=dual-path-knob-parity
                         * predicted_remaining(cand)):
                     return 1.0   # preemption fires next tick (monotone ↓)
         n = self._n_active

@@ -89,6 +89,10 @@ class Policy:
     refine_every: int = 0             # 0 = no mid-flight refinement
 
     def __post_init__(self):
+        if self.order not in ORDERINGS:
+            raise ValueError(f"order {self.order!r} not in {ORDERINGS}")
+        if self.reserve not in RESERVES:
+            raise ValueError(f"reserve {self.reserve!r} not in {RESERVES}")
         if self.preempt_mode not in PREEMPT_MODES:
             raise ValueError(
                 f"preempt_mode {self.preempt_mode!r} not in {PREEMPT_MODES}")

@@ -1,0 +1,42 @@
+"""Known-bad miniature two-path engine: the vectorized tick forgot the
+``policy.max_seq_len`` cap the reference tick applies (the classic
+unthreaded-knob bug), and the leap machinery consults a knob
+(``spec.burst_len``) the reference path never reads."""
+
+
+class MiniEngine:
+    def __init__(self, policy, spec):
+        self.policy = policy
+        self.spec = spec
+        self._budget = spec.step_token_budget
+        self.slots = []
+        self.t = 0.0
+
+    def _decode_tick_ref(self):
+        sp = self.spec.speed
+        cap = self.policy.max_seq_len
+        quota = self._budget if self._budget is not None else cap
+        for i, g in enumerate(self.slots):
+            self.slots[i] = min(g + min(sp, quota), cap)
+            quota -= sp
+
+    def _decode_tick_vec(self):
+        # BUG: no policy.max_seq_len cap — paths diverge at the cap
+        sp = self.spec.speed
+        quota = self._budget if self._budget is not None else 1 << 30
+        self.slots = [g + min(sp, quota) for g in self.slots]
+
+    def ticks_to_event(self):
+        sp = self.spec.speed
+        # BUG: burst_len gates the leap but the reference loop ignores it
+        if len(self.slots) * sp > self.spec.burst_len:
+            return 1.0
+        if self._budget is not None and len(self.slots) * sp > self._budget:
+            return 1.0
+        return max((self.policy.max_seq_len - max(self.slots)) // sp, 1.0)
+
+    def leap(self, q):
+        sp = self.spec.speed
+        cap = self.policy.max_seq_len
+        self.t += q
+        self.slots = [min(g + q * sp, cap) for g in self.slots]

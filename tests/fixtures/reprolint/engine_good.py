@@ -1,0 +1,38 @@
+"""Known-good miniature two-path engine: every knob threaded through both
+the reference and the vectorized/leap decode paths.  Parsed (never
+executed) by tests/test_reprolint.py."""
+
+
+class MiniEngine:
+    def __init__(self, policy, spec):
+        self.policy = policy
+        self.spec = spec
+        self._budget = spec.step_token_budget     # derived knob
+        self.slots = []
+        self.t = 0.0
+
+    def _decode_tick_ref(self):
+        sp = self.spec.speed
+        cap = self.policy.max_seq_len
+        quota = self._budget if self._budget is not None else cap
+        for i, g in enumerate(self.slots):
+            self.slots[i] = min(g + min(sp, quota), cap)
+            quota -= sp
+
+    def _decode_tick_vec(self):
+        sp = self.spec.speed
+        cap = self.policy.max_seq_len
+        quota = self._budget if self._budget is not None else cap
+        self.slots = [min(g + min(sp, quota), cap) for g in self.slots]
+
+    def ticks_to_event(self):
+        sp = self.spec.speed
+        if self._budget is not None and len(self.slots) * sp > self._budget:
+            return 1.0
+        return max((self.policy.max_seq_len - max(self.slots)) // sp, 1.0)
+
+    def leap(self, q):
+        sp = self.spec.speed
+        cap = self.policy.max_seq_len
+        self.t += q
+        self.slots = [min(g + q * sp, cap) for g in self.slots]

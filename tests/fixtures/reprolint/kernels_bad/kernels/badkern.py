@@ -1,0 +1,33 @@
+"""Known-bad fixture kernels, one violation per kernel-contract sub-check:
+
+* ``badkern_pallas`` — no ``badkern_ref``, no ``ops.badkern`` wrapper, no
+  interpret test, an unguarded ``//`` grid (no ``%`` padding in scope),
+  and a 2-arg index map against a 1-d grid;
+* ``halfwired_pallas`` — wrapper and oracle exist but the wrapper calls
+  neither.
+
+Parse-only.
+"""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _badkern_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def badkern_pallas(x, *, block=128, interpret=False):
+    g = x.shape[0] // block   # BUG: remainder block silently dropped
+    return pl.pallas_call(
+        _badkern_kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((block,), lambda i, j: (i,))],  # BUG: arity
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def halfwired_pallas(x, *, interpret=False):
+    return x + 1

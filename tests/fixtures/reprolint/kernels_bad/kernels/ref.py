@@ -1,0 +1,8 @@
+"""Oracles for the known-bad kernel fixture: ``halfwired_ref`` exists but
+is never wired into its wrapper; ``badkern`` has no oracle at all."""
+
+import jax.numpy as jnp
+
+
+def halfwired_ref(x):
+    return jnp.asarray(x) + 1

@@ -1,0 +1,10 @@
+"""Dispatch wrappers for the known-good kernel fixture (parse-only)."""
+
+from .ref import toyfuse_ref
+from .toyfuse import toyfuse_pallas
+
+
+def toyfuse(x, w, impl="pallas"):
+    if impl == "xla":
+        return toyfuse_ref(x, w)
+    return toyfuse_pallas(x, w, interpret=(impl == "interpret"))

@@ -1,0 +1,7 @@
+"""Pure-jnp oracles for the known-good kernel fixture (parse-only)."""
+
+import jax.numpy as jnp
+
+
+def toyfuse_ref(x, w):
+    return jnp.asarray(x) * jnp.asarray(w)

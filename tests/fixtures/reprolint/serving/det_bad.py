@@ -1,0 +1,38 @@
+"""Known-bad determinism fixture: one hazard per determinism sub-check.
+Lives under a ``serving/`` component so the checker takes it in scope.
+Parsed, never imported (np/time are deliberately not imported)."""
+
+ORDERINGS = ("fcfs", "sjf")
+
+
+class BadPolicy:
+    def __init__(self, order="fcfs"):
+        # BUG: never checked against ORDERINGS
+        self.order = order
+
+
+class BadScheduler:
+    def __init__(self, policy):
+        self.policy = policy
+        self.waiting = set()
+
+    def drain(self):
+        done = []
+        for rid in set(self.waiting):            # BUG: set iteration order
+            done.append(rid)
+        return done
+
+    def tie_break(self, reqs):
+        return sorted(reqs, key=lambda r: id(r))  # BUG: identity sort key
+
+    def jitter(self):
+        return np.random.rand()                  # BUG: global numpy RNG
+
+    def jitter2(self):
+        return random.random()                   # BUG: global python RNG
+
+    def fresh_rng(self):
+        return np.random.default_rng()           # BUG: unseeded
+
+    def stamp(self):
+        return time.time()                       # BUG: wall clock

@@ -1,0 +1,37 @@
+"""Known-good determinism fixture: the same jobs done reproducibly.
+Lives under a ``serving/`` component so the checker takes it in scope."""
+
+import numpy as np
+
+ORDERINGS = ("fcfs", "sjf")
+
+
+class GoodPolicy:
+    def __init__(self, order="fcfs"):
+        if order not in ORDERINGS:
+            raise ValueError(f"order {order!r} not in {ORDERINGS}")
+        self.order = order
+
+
+class GoodScheduler:
+    def __init__(self, policy, seed):
+        self.policy = policy
+        self.rng = np.random.default_rng(seed)
+        self.waiting = set()
+        self.t = 0.0
+
+    def drain(self):
+        return [rid for rid in sorted(self.waiting)]
+
+    def has(self, rid):
+        # membership tests on sets are fine; only iteration order is hazardous
+        return rid in self.waiting
+
+    def tie_break(self, reqs):
+        return sorted(reqs, key=lambda r: r.rid)
+
+    def jitter(self):
+        return self.rng.random()
+
+    def stamp(self):
+        return self.t

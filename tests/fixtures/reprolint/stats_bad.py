@@ -1,0 +1,79 @@
+"""Known-bad conservation fixture, one violation per sub-check:
+
+* ``ServeStats.lost_counter`` has no ``ClusterStats`` counterpart;
+* ``ClusterStats.stolen`` is declared but never passed at the merge site;
+* ``ClusterStats.row()`` drops ``timed_out`` without a suppression;
+* an emit site produces ``"vanished"`` which the registry doesn't declare;
+* the registry declares ``"ghost"`` which nothing emits;
+* ``TERMINAL_KINDS`` carries ``"rejected"`` which EVENT_KINDS lacks.
+"""
+
+from dataclasses import dataclass
+
+EVENT_KINDS = ("arrival", "finish", "timeout", "ghost")
+TERMINAL_KINDS = ("finish", "timeout", "rejected")
+
+
+@dataclass
+class ServeStats:
+    policy: str
+    completed: int = 0
+    timed_out: int = 0
+    lost_counter: int = 0
+
+    def row(self) -> dict:
+        return self.__dict__.copy()
+
+
+@dataclass
+class ClusterStats:
+    policy: str
+    completed: int = 0
+    timed_out: int = 0
+    stolen: int = 0
+
+    def row(self) -> dict:
+        d = self.__dict__.copy()
+        d.pop("timed_out")
+        return d
+
+
+class SimEngine:
+    def __init__(self, tracer):
+        self.tracer = tracer
+        self.completed = 0
+        self.timed_out = 0
+        self.lost_counter = 0
+
+    def submit(self, r):
+        self.tracer.emit(0.0, 0, r, "arrival")
+
+    def finish(self, r):
+        self.completed += 1
+        self.tracer.emit(1.0, 0, r, "finish")
+
+    def expire(self, r):
+        self.timed_out += 1
+        self.tracer.emit(1.0, 0, r, "timeout")
+
+    def vanish(self, r):
+        self.lost_counter += 1
+        self.tracer.emit(1.0, 0, r, "vanished")
+
+    def stats(self):
+        return ServeStats(policy="fcfs", completed=self.completed,
+                          timed_out=self.timed_out,
+                          lost_counter=self.lost_counter)
+
+
+class Cluster:
+    def __init__(self, engines):
+        self.engines = engines
+        self.stolen = 0
+
+    def _stats(self):
+        return ClusterStats(
+            policy="fcfs",
+            completed=sum(e.completed for e in self.engines),
+            timed_out=sum(e.timed_out for e in self.engines),
+        )

@@ -1,0 +1,353 @@
+"""reprolint self-tests.
+
+Fixture-proven true-positive and true-negative per checker family
+(``tests/fixtures/reprolint/``), suppression-grammar and baseline
+round-trips, the JSON report schema, the live-repo-matches-baseline
+self-check, and mutation smoke tests that delete a single knob read from
+one decode path of the *real* engine and demand the dual-path checker
+notice.
+"""
+
+import ast
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:           # `python -m pytest` from the
+    sys.path.insert(0, str(REPO_ROOT))       # repo root already has it
+
+from tools.reprolint import Project, run_checkers            # noqa: E402
+from tools.reprolint.__main__ import main as reprolint_main  # noqa: E402
+from tools.reprolint.baseline import (                       # noqa: E402
+    diff_baseline, load_baseline, save_baseline)
+from tools.reprolint.checkers import ALL_CHECKERS            # noqa: E402
+from tools.reprolint.checkers.conservation import (          # noqa: E402
+    ConservationChecker)
+from tools.reprolint.checkers.determinism import (           # noqa: E402
+    DeterminismChecker)
+from tools.reprolint.checkers.dual_path import (             # noqa: E402
+    DualPathChecker)
+from tools.reprolint.checkers.kernel_contracts import (      # noqa: E402
+    KernelContractChecker)
+from tools.reprolint.reporters import report_json            # noqa: E402
+
+FIXTURES = REPO_ROOT / "tests" / "fixtures" / "reprolint"
+ENGINE = REPO_ROOT / "src" / "repro" / "serving" / "engine.py"
+BASELINE = REPO_ROOT / "tools" / "reprolint" / "baseline.json"
+
+
+def run_on(root, paths, checker):
+    project = Project(root, paths)
+    assert not project.errors, project.errors
+    return run_checkers(project, [checker])
+
+
+def keys(findings):
+    return {f.key for f in findings}
+
+
+# -- checker (1): dual-path knob parity ------------------------------------
+
+def test_dual_path_good_engine_is_clean():
+    active, suppressed = run_on(FIXTURES, [FIXTURES / "engine_good.py"],
+                                DualPathChecker())
+    assert active == [] and suppressed == []
+
+
+def test_dual_path_bad_engine_both_groups_both_directions():
+    active, _ = run_on(FIXTURES, [FIXTURES / "engine_bad.py"],
+                       DualPathChecker())
+    assert keys(active) == {
+        # vec tick forgot the cap the reference tick applies
+        "tick:policy.max_seq_len:unread-on:vectorized tick",
+        # leap machinery consults a knob the reference path never reads
+        "path:spec.burst_len:unread-on:reference path",
+    }
+    by_key = {f.key: f for f in active}
+    assert all(f.check == "dual-path-knob-parity" for f in active)
+    assert "max_seq_len" in by_key[
+        "tick:policy.max_seq_len:unread-on:vectorized tick"].message
+
+
+# -- checker (2): stats conservation / tracer kinds ------------------------
+
+def test_conservation_good_stats_clean_with_one_suppression():
+    active, suppressed = run_on(FIXTURES, [FIXTURES / "stats_good.py"],
+                                ConservationChecker())
+    assert active == []
+    # replica_rows is deliberately popped from row(), with a justification
+    assert keys(suppressed) == {"unsurfaced:replica_rows"}
+
+
+def test_conservation_bad_stats_one_finding_per_subcheck():
+    active, _ = run_on(FIXTURES, [FIXTURES / "stats_bad.py"],
+                       ConservationChecker())
+    assert keys(active) == {
+        "unmerged-field:lost_counter",          # no ClusterStats twin
+        "unaggregated:ClusterStats.stolen",     # declared, never passed
+        "unsurfaced:timed_out",                 # popped without suppression
+        "unregistered:vanished",                # emitted, not declared
+        "unemitted:ghost",                      # declared, never emitted
+        "terminal-unregistered:rejected",       # TERMINAL ⊄ EVENT_KINDS
+    }
+
+
+# -- checker (3): determinism hazards --------------------------------------
+
+def test_determinism_good_serving_module_is_clean():
+    active, suppressed = run_on(
+        FIXTURES, [FIXTURES / "serving" / "det_good.py"],
+        DeterminismChecker())
+    assert active == [] and suppressed == []
+
+
+def test_determinism_bad_serving_module_one_finding_per_hazard():
+    active, _ = run_on(FIXTURES, [FIXTURES / "serving" / "det_bad.py"],
+                       DeterminismChecker())
+    assert keys(active) == {
+        "set-iteration",
+        "id-call",
+        "np-global:rand",
+        "py-global:random",
+        "default-rng-unseeded",
+        "clock:time.time",
+        "unvalidated:order",
+    }
+
+
+def test_determinism_scope_is_the_serving_layer(tmp_path):
+    hazard = "import time\n\n\ndef stamp():\n    return time.time()\n"
+    (tmp_path / "serving").mkdir()
+    (tmp_path / "serving" / "mod.py").write_text(hazard)
+    (tmp_path / "other.py").write_text(hazard)
+    active, _ = run_on(tmp_path, [tmp_path], DeterminismChecker())
+    assert [f.path for f in active] == ["serving/mod.py"]
+
+
+# -- checker (4): Pallas kernel contracts ----------------------------------
+
+def test_kernel_contracts_good_package_is_clean():
+    root = FIXTURES / "kernels_good"
+    active, suppressed = run_on(root, [root / "kernels"],
+                                KernelContractChecker())
+    assert active == [] and suppressed == []
+
+
+def test_kernel_contracts_bad_package_every_subcheck():
+    root = FIXTURES / "kernels_bad"
+    active, _ = run_on(root, [root / "kernels"], KernelContractChecker())
+    assert keys(active) == {
+        "no-ref:badkern", "no-op:badkern", "untested:badkern",
+        "unguarded-floordiv", "arity:2-vs-1",
+        "op-no-pallas:halfwired", "op-no-ref:halfwired",
+        "untested:halfwired",
+    }
+    severities = {f.key: f.severity for f in active}
+    assert severities["unguarded-floordiv"] == "warning"
+    assert severities["no-ref:badkern"] == "error"
+
+
+# -- suppressions ----------------------------------------------------------
+
+_HAZARD = "import time\n\n\ndef stamp():\n    return time.time()\n"
+
+
+def _det_run(tmp_path, text):
+    (tmp_path / "serving").mkdir(exist_ok=True)
+    (tmp_path / "serving" / "mod.py").write_text(text)
+    return run_on(tmp_path, [tmp_path], DeterminismChecker())
+
+
+def test_line_suppression_with_justification(tmp_path):
+    text = _HAZARD.replace(
+        "time.time()",
+        "time.time()  # reprolint: disable=wall-clock -- fixture clock")
+    active, suppressed = _det_run(tmp_path, text)
+    assert active == [] and keys(suppressed) == {"clock:time.time"}
+
+
+def test_symbol_level_suppression_on_def_header(tmp_path):
+    text = _HAZARD.replace(
+        "def stamp():",
+        "def stamp():  # reprolint: disable=wall-clock -- whole symbol")
+    active, suppressed = _det_run(tmp_path, text)
+    assert active == [] and keys(suppressed) == {"clock:time.time"}
+
+
+def test_file_level_suppression(tmp_path):
+    active, suppressed = _det_run(
+        tmp_path, "# reprolint: disable-file=wall-clock\n" + _HAZARD)
+    assert active == [] and keys(suppressed) == {"clock:time.time"}
+
+
+def test_suppression_is_check_specific(tmp_path):
+    # disabling a *different* check must not silence the wall-clock finding
+    text = _HAZARD.replace(
+        "time.time()",
+        "time.time()  # reprolint: disable=set-iteration-order")
+    active, suppressed = _det_run(tmp_path, text)
+    assert keys(active) == {"clock:time.time"} and suppressed == []
+
+
+def test_any_site_suppression_of_multisite_finding(tmp_path):
+    # acknowledging one read site of an asymmetric knob acknowledges the
+    # knob: the engine_bad burst_len finding has its sites in ticks_to_event
+    text = (FIXTURES / "engine_bad.py").read_text().replace(
+        "self.spec.burst_len:",
+        "self.spec.burst_len:"
+        "  # reprolint: disable=dual-path-knob-parity -- lookahead only")
+    (tmp_path / "engine_bad.py").write_text(text)
+    active, suppressed = run_on(tmp_path, [tmp_path], DualPathChecker())
+    assert "path:spec.burst_len:unread-on:reference path" not in keys(active)
+    assert "path:spec.burst_len:unread-on:reference path" in keys(suppressed)
+
+
+# -- baseline --------------------------------------------------------------
+
+def test_baseline_roundtrip_and_diff(tmp_path):
+    active, _ = run_on(FIXTURES, [FIXTURES / "engine_bad.py"],
+                       DualPathChecker())
+    assert len(active) == 2
+    path = tmp_path / "baseline.json"
+    save_baseline(path, active)
+    entries = load_baseline(path)
+    assert [tuple(e[k] for k in ("check", "path", "symbol", "key"))
+            for e in entries] == sorted(f.identity for f in active)
+
+    new, known, fixed = diff_baseline(active, entries)
+    assert new == [] and len(known) == 2 and fixed == []
+
+    new, known, fixed = diff_baseline(active, entries[:1])
+    assert len(new) == 1 and len(known) == 1 and fixed == []
+
+    new, known, fixed = diff_baseline(active[:1], entries)
+    assert new == [] and len(known) == 1 and len(fixed) == 1
+
+
+def test_baseline_rejects_unknown_version(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError, match="version"):
+        load_baseline(path)
+
+
+# -- JSON reporter ---------------------------------------------------------
+
+def test_json_report_schema():
+    active, suppressed = run_on(FIXTURES, [FIXTURES / "engine_bad.py"],
+                                DualPathChecker())
+    new, _, fixed = diff_baseline(active, [])
+    doc = report_json(active, new, suppressed, fixed,
+                      ["engine_bad.py"], None)
+    assert doc["version"] == 1 and doc["tool"] == "reprolint"
+    assert doc["baseline"] is None and doc["paths"] == ["engine_bad.py"]
+    assert doc["counts"] == {"findings": 2, "new": 2, "suppressed": 0,
+                             "fixed": 0}
+    for f in doc["findings"]:
+        assert {"check", "path", "line", "symbol", "key", "message",
+                "severity", "new"} <= set(f)
+        assert f["new"] is True
+    json.dumps(doc)   # must be serializable as-is
+
+
+# -- runner / live-repo self-check -----------------------------------------
+
+def test_cli_gate_passes_on_live_repo():
+    # the committed gate: src/ vs tools/reprolint/baseline.json
+    assert reprolint_main(["src", "--root", str(REPO_ROOT)]) == 0
+
+
+def test_live_findings_match_committed_baseline():
+    project = Project(REPO_ROOT, [REPO_ROOT / "src"])
+    active, _ = run_checkers(project, [cls() for cls in ALL_CHECKERS])
+    new, _known, _fixed = diff_baseline(active, load_baseline(BASELINE))
+    assert not new, [f.identity for f in new]
+
+
+def test_cli_fails_on_findings_without_baseline(capsys):
+    rc = reprolint_main([str(FIXTURES / "engine_bad.py"),
+                         "--root", str(FIXTURES), "--no-baseline"])
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().err
+
+
+def test_cli_baseline_write_then_gate_then_artifact(tmp_path):
+    base = tmp_path / "baseline.json"
+    report = tmp_path / "report.json"
+    argv = [str(FIXTURES / "engine_bad.py"), "--root", str(FIXTURES),
+            "--baseline", str(base)]
+    assert reprolint_main(argv + ["--write-baseline"]) == 0
+    assert reprolint_main(argv + ["--json", str(report)]) == 0
+    doc = json.loads(report.read_text())
+    assert doc["counts"] == {"findings": 2, "new": 0, "suppressed": 0,
+                             "fixed": 0}
+
+
+def test_cli_missing_baseline_is_an_error(tmp_path):
+    rc = reprolint_main([str(FIXTURES / "engine_good.py"),
+                         "--root", str(FIXTURES),
+                         "--baseline", str(tmp_path / "nope.json")])
+    assert rc == 1
+
+
+# -- mutation smoke tests on the real engine -------------------------------
+
+def _strip_knob_read(text, method, needle, replacement):
+    """Replace ``needle`` on every line of ``method``'s body only."""
+    tree = ast.parse(text)
+    fn = next(n for n in ast.walk(tree)
+              if isinstance(n, ast.FunctionDef) and n.name == method)
+    lines = text.splitlines(keepends=True)
+    hit = False
+    for i in range(fn.lineno - 1, fn.end_lineno):
+        if needle in lines[i]:
+            lines[i] = lines[i].replace(needle, replacement)
+            hit = True
+    assert hit, f"{needle!r} not found in {method}"
+    return "".join(lines)
+
+
+def _dual_path_on(tmp_path, text):
+    (tmp_path / "engine.py").write_text(text)
+    return run_on(tmp_path, [tmp_path / "engine.py"], DualPathChecker())
+
+
+def test_real_engine_is_clean_under_dual_path(tmp_path):
+    active, suppressed = _dual_path_on(tmp_path, ENGINE.read_text())
+    assert active == []
+    assert suppressed, "the documented asymmetries should be suppressed, " \
+                       "not absent"
+
+
+@pytest.mark.parametrize("method,side", [
+    ("_decode_tick_vec", "vectorized tick"),
+    ("_decode_tick_ref", "reference tick"),
+])
+def test_mutation_deleting_one_knob_read_fails(tmp_path, method, side):
+    mutated = _strip_knob_read(ENGINE.read_text(), method,
+                               "self.spec.speed", "8")
+    active, _ = _dual_path_on(tmp_path, mutated)
+    assert f"tick:spec.speed:unread-on:{side}" in keys(active)
+
+
+def test_mutation_removing_suppressions_surfaces_findings(tmp_path):
+    text = ENGINE.read_text().replace(
+        "# reprolint: disable=dual-path-knob-parity", "#")
+    active, _ = _dual_path_on(tmp_path, text)
+    assert active, "stripping the inline suppressions must resurface the " \
+                   "acknowledged asymmetries"
+    assert all(f.check == "dual-path-knob-parity" for f in active)
+
+
+# -- satellite: Policy eager knob validation -------------------------------
+
+def test_policy_rejects_unknown_order_and_reserve():
+    from repro.serving.scheduler import Policy
+    with pytest.raises(ValueError, match="order"):
+        Policy(order="not-an-ordering")
+    with pytest.raises(ValueError, match="reserve"):
+        Policy(reserve="not-a-reserve-mode")
+    Policy()   # defaults stay valid

@@ -100,6 +100,7 @@ CLUSTER_GOLDEN = {
     'balance': 1.4838637881148453, 'completed': 86, 'cow_copies': 0,
     'dropped': 0, 'frag_ratio': -0.19515624100568107,
     'goodput': 11.767857142857142, 'held_peak': 776,
+    'held_releases': 0, 'held_steps': 210896.0,
     'kv_amplification': 1.2173248847620186,
     'kv_waste_ratio': 0.3301723145454465, 'makespan': 672.0,
     'mean_latency': 230.34985295918955, 'mean_ttft': 159.52427156384067,
@@ -110,7 +111,8 @@ CLUSTER_GOLDEN = {
     'p90_ttft': 387.8992511807843, 'p99_latency': 548.7989852052087,
     'p99_ttft': 468.5890644095952, 'policy': 'srtf_pred+quantile',
     'preemptions': 7, 'prefill_saved_ticks': 121, 'prefill_ticks': 311,
-    'prefix_hits': 91, 'recompute_ticks': 0, 'refine_events': 0,
+    'prefix_evictions': 0, 'prefix_hits': 91, 'recompute_ticks': 0,
+    'refine_events': 0,
     'refine_grows': 0, 'refine_shrinks': 0, 'refreshes': 0, 'rejected': 197,
     'router': 'psq', 'shared_peak': 128, 'slo_violations': 8,
     'steal_delay': 0, 'steal_pages': 312, 'stolen': 15,

@@ -1,0 +1,24 @@
+"""reprolint — repo-specific static analysis for the serving simulator.
+
+The simulator lives by a handful of invariants that ordinary linters cannot
+see: every scheduling knob must be threaded through BOTH the per-slot
+reference decode path and the vectorized/event-leap path, every per-replica
+counter must survive the cluster merge and reach an exporter, scheduling
+decisions must never depend on set iteration order or wall clocks, and every
+Pallas kernel must ship with an XLA reference twin plus an interpret-vs-xla
+test.  ``reprolint`` encodes those invariants as AST checkers with a
+committed baseline (new findings fail CI, pre-existing ones don't) and
+``# reprolint: disable=<check>`` suppressions for deliberate exceptions.
+
+Run it as ``python -m tools.reprolint src/``; see ``docs/static-analysis.md``
+for the checker catalog and workflow.
+"""
+
+from tools.reprolint.core import (  # noqa: F401
+    Finding,
+    Project,
+    SourceFile,
+    run_checkers,
+)
+
+__version__ = "1.0"

@@ -1,0 +1,131 @@
+"""reprolint runner.
+
+Typical CI usage (exit 0 = no findings beyond the committed baseline,
+exit 1 = new findings or a stale baseline path, exit 2 = usage error)::
+
+    python -m tools.reprolint src/ --baseline tools/reprolint/baseline.json \
+        --json reprolint-report.json
+
+``--baseline`` defaults to the committed ``tools/reprolint/baseline.json``
+when it exists, so ``python -m tools.reprolint src/`` is the full gate.
+``--write-baseline`` refreshes the committed file from the current findings
+(for intentionally accepted debt — prefer fixing or suppressing inline).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.reprolint.baseline import (diff_baseline, load_baseline,
+                                      save_baseline)
+from tools.reprolint.checkers import ALL_CHECK_IDS, ALL_CHECKERS
+from tools.reprolint.core import Project, run_checkers
+from tools.reprolint.reporters import (report_human, report_json, write_json)
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="repo-specific static analysis: dual-path knob parity, "
+                    "stats conservation, determinism hazards, Pallas "
+                    "kernel contracts")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to scan (default: src)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON; only findings NOT in it fail "
+                         "(default: tools/reprolint/baseline.json if "
+                         "present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline: every finding fails")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings to the baseline path "
+                         "and exit 0")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the JSON report (the CI artifact)")
+    ap.add_argument("--checks", default=None,
+                    help="comma-separated subset of checks to run")
+    ap.add_argument("--list-checks", action="store_true",
+                    help="list check ids and exit")
+    ap.add_argument("--root", default=".",
+                    help="repo root for relative paths and the tests/ "
+                         "cross-reference (default: cwd)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print suppressed findings")
+    args = ap.parse_args(argv)
+
+    if args.list_checks:
+        for checker in ALL_CHECKERS:
+            print(f"{checker.name}: {checker.description}")
+            for check in checker.checks:
+                print(f"  {check}")
+        return 0
+
+    only = None
+    if args.checks:
+        only = {c.strip() for c in args.checks.split(",") if c.strip()}
+        unknown = only - set(ALL_CHECK_IDS)
+        if unknown:
+            ap.error(f"unknown check(s): {', '.join(sorted(unknown))} "
+                     f"(see --list-checks)")
+
+    root = Path(args.root).resolve()
+    paths = [root / p if not Path(p).is_absolute() else Path(p)
+             for p in args.paths]
+    missing = [str(p) for p in paths if not p.exists()]
+    if missing:
+        ap.error(f"no such path(s): {', '.join(missing)}")
+
+    project = Project(root, paths)
+    for err in project.errors:
+        print(f"skip  unparseable: {err}", file=sys.stderr)
+    if not project.files:
+        print("FAIL  no Python files found under the given paths "
+              "(nothing was checked)", file=sys.stderr)
+        return 1
+
+    findings, suppressed = run_checkers(
+        project, [cls() for cls in ALL_CHECKERS], only=only)
+
+    baseline_path = None
+    if not args.no_baseline:
+        if args.baseline is not None:
+            baseline_path = Path(args.baseline)
+            if not baseline_path.exists() and not args.write_baseline:
+                print(f"FAIL  baseline {baseline_path} does not exist "
+                      f"(pass --no-baseline to gate on all findings, or "
+                      f"--write-baseline to create it)", file=sys.stderr)
+                return 1
+        elif DEFAULT_BASELINE.exists():
+            baseline_path = DEFAULT_BASELINE
+
+    if args.write_baseline:
+        target = baseline_path or DEFAULT_BASELINE
+        save_baseline(target, findings)
+        print(f"wrote {len(findings)} finding(s) to {target}")
+        return 0
+
+    baseline = []
+    if baseline_path is not None and baseline_path.exists():
+        baseline = load_baseline(baseline_path)
+    new, _known, fixed = diff_baseline(findings, baseline)
+
+    shown_baseline = str(baseline_path) if baseline_path else None
+    report_human(findings, new, suppressed, fixed, shown_baseline,
+                 verbose=args.verbose)
+    if args.json:
+        write_json(report_json(findings, new, suppressed, fixed,
+                               [str(p) for p in args.paths],
+                               shown_baseline), args.json)
+    if new:
+        return 1
+    print("no new findings vs baseline" if baseline_path
+          else "no findings")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,68 @@
+"""Baseline load/save/diff — the "new findings fail, old ones don't" gate.
+
+The baseline is a committed JSON multiset of finding identities
+``(check, path, symbol, key)``.  ``key`` is checker-chosen and line-free,
+so reformatting or unrelated edits don't churn the baseline; moving a
+finding to another symbol or file *does* count as new (it is new code).
+"""
+
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+from typing import List, Sequence, Tuple
+
+from tools.reprolint.core import Finding
+
+BASELINE_VERSION = 1
+
+Identity = Tuple[str, str, str, str]
+
+
+def _identity(entry: dict) -> Identity:
+    return (entry["check"], entry["path"], entry["symbol"], entry["key"])
+
+
+def load_baseline(path: Path) -> List[dict]:
+    doc = json.loads(Path(path).read_text())
+    if doc.get("version") != BASELINE_VERSION:
+        raise ValueError(f"{path}: unsupported baseline version "
+                         f"{doc.get('version')!r}")
+    entries = doc.get("findings")
+    if not isinstance(entries, list):
+        raise ValueError(f"{path}: no 'findings' list")
+    for e in entries:
+        _identity(e)   # KeyError -> malformed entry
+    return entries
+
+
+def save_baseline(path: Path, findings: Sequence[Finding]) -> None:
+    entries = sorted(
+        ({"check": f.check, "path": f.path, "symbol": f.symbol, "key": f.key}
+         for f in findings),
+        key=_identity)
+    doc = {"version": BASELINE_VERSION, "findings": entries}
+    Path(path).write_text(json.dumps(doc, indent=2) + "\n")
+
+
+def diff_baseline(findings: Sequence[Finding], baseline: Sequence[dict],
+                  ) -> Tuple[List[Finding], List[Finding], List[dict]]:
+    """Split live findings against the baseline multiset.
+
+    Returns ``(new, known, fixed)``: findings absent from the baseline,
+    findings it already carries, and baseline entries no longer observed
+    (candidates for a baseline refresh).
+    """
+    budget = Counter(_identity(e) for e in baseline)
+    new: List[Finding] = []
+    known: List[Finding] = []
+    for f in findings:
+        if budget[f.identity] > 0:
+            budget[f.identity] -= 1
+            known.append(f)
+        else:
+            new.append(f)
+    fixed = [dict(zip(("check", "path", "symbol", "key"), ident))
+             for ident, count in sorted(budget.items()) for _ in range(count)]
+    return new, known, fixed

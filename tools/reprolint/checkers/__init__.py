@@ -1,0 +1,16 @@
+"""Checker registry — one module per checker family."""
+
+from tools.reprolint.checkers.conservation import ConservationChecker
+from tools.reprolint.checkers.determinism import DeterminismChecker
+from tools.reprolint.checkers.dual_path import DualPathChecker
+from tools.reprolint.checkers.kernel_contracts import KernelContractChecker
+
+ALL_CHECKERS = (
+    DualPathChecker,
+    ConservationChecker,
+    DeterminismChecker,
+    KernelContractChecker,
+)
+
+ALL_CHECK_IDS = tuple(sorted(
+    check for checker in ALL_CHECKERS for check in checker.checks))

@@ -1,0 +1,276 @@
+"""Checker (2): stats conservation and the tracer kind registry.
+
+The serving telemetry conserves requests (``submitted == finish + timeout +
+rejected + dropped``) only if every layer forwards every counter.  Three
+mechanical invariants keep that true as counters accrete:
+
+* ``stats-cluster-parity`` — every ``ServeStats`` field must have a
+  same-named ``ClusterStats`` field, else a per-replica counter silently
+  vanishes at the cluster merge (how ``held_releases``/``prefix_evictions``
+  went missing; fixed in the PR that introduced this checker).  Genuinely
+  per-replica fields (``page_size`` on a heterogeneous fleet) carry an
+  inline suppression.
+* ``stats-merge-aggregation`` — every *int-annotated* (counter) field of
+  ``ServeStats``/``ClusterStats`` must be passed as an explicit keyword in
+  the constructor call inside ``SimEngine.stats`` / ``Cluster._stats``; a
+  field added with a default but never filled reports zero forever.
+  (Float summary fields arrive via ``**latency_summary(...)``-style
+  expansions the AST can't see through, so they are out of scope here.)
+* ``stats-exporter-surfacing`` — ``row()`` must surface every field to the
+  JSON/Prometheus exporters: a ``self.__dict__.copy()`` body surfaces all,
+  each ``.pop("x")`` hides one (finding unless suppressed), a dict-literal
+  body surfaces exactly its keys.
+
+* ``tracer-kind-registry`` — every constant event kind passed to
+  ``*.emit(t, replica, rid, kind, ...)`` must be declared in
+  ``EVENT_KINDS``, every declared kind must be emitted somewhere, and
+  ``TERMINAL_KINDS`` must be a subset of the registry.  An undeclared kind
+  bypasses the conservation accounting in ``Tracer.terminal_counts``; a
+  never-emitted kind is a dead registry entry that masks typos.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.reprolint.core import (Checker, Finding, Project, SourceFile,
+                                  const_str, dataclass_fields, str_tuple)
+
+PARITY = "stats-cluster-parity"
+MERGE = "stats-merge-aggregation"
+SURFACE = "stats-exporter-surfacing"
+KINDS = "tracer-kind-registry"
+
+# (per-replica class, merged class, merge method owner, merge method)
+STATS_PAIR = ("ServeStats", "ClusterStats")
+MERGE_SITES = {"ServeStats": ("SimEngine", "stats"),
+               "ClusterStats": ("Cluster", "_stats")}
+
+
+def _find_class(project: Project, name: str,
+                ) -> Optional[Tuple[SourceFile, ast.ClassDef]]:
+    for src in project.files:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.ClassDef) and node.name == name:
+                return src, node
+    return None
+
+
+def _find_method(project: Project, cls_name: str, meth: str,
+                 ) -> Optional[Tuple[SourceFile, ast.FunctionDef]]:
+    hit = _find_class(project, cls_name)
+    if hit is None:
+        return None
+    src, cls = hit
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == meth:
+            return src, node
+    return None
+
+
+class ConservationChecker(Checker):
+    name = "conservation"
+    checks = (PARITY, MERGE, SURFACE, KINDS)
+    description = ("counters must survive the cluster merge and reach the "
+                   "exporters; tracer kinds must match the registry")
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        findings.extend(self._check_field_parity(project))
+        findings.extend(self._check_merge(project))
+        findings.extend(self._check_row_surfacing(project))
+        findings.extend(self._check_kinds(project))
+        return findings
+
+    # -- stats-cluster-parity --------------------------------------------
+    def _check_field_parity(self, project: Project) -> List[Finding]:
+        serve = _find_class(project, STATS_PAIR[0])
+        cluster = _find_class(project, STATS_PAIR[1])
+        if serve is None or cluster is None:
+            return []
+        src, cls = serve
+        cluster_fields = {n for n, _, _ in dataclass_fields(cluster[1])}
+        out = []
+        for fname, lineno, _ in dataclass_fields(cls):
+            if fname not in cluster_fields:
+                out.append(Finding(
+                    check=PARITY, path=src.relpath, line=lineno,
+                    symbol=cls.name,
+                    message=(f"ServeStats.{fname} has no ClusterStats "
+                             f"counterpart — the counter vanishes at the "
+                             f"cluster merge (aggregate it, or suppress if "
+                             f"genuinely per-replica)"),
+                    key=f"unmerged-field:{fname}"))
+        return out
+
+    # -- stats-merge-aggregation -----------------------------------------
+    def _check_merge(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for stats_cls, (owner, meth) in MERGE_SITES.items():
+            target = _find_class(project, stats_cls)
+            site = _find_method(project, owner, meth)
+            if target is None or site is None:
+                continue
+            src, fn = site
+            call = self._constructor_call(fn, stats_cls)
+            if call is None:
+                out.append(Finding(
+                    check=MERGE, path=src.relpath, line=fn.lineno,
+                    symbol=f"{owner}.{meth}",
+                    message=(f"{owner}.{meth} never constructs {stats_cls} "
+                             f"— the merge site the checker audits is gone"),
+                    key=f"no-constructor:{stats_cls}"))
+                continue
+            passed = {kw.arg for kw in call.keywords if kw.arg is not None}
+            for fname, _, ann in dataclass_fields(target[1]):
+                if ann != "int" or fname in passed:
+                    continue
+                out.append(Finding(
+                    check=MERGE, path=src.relpath, line=call.lineno,
+                    symbol=f"{owner}.{meth}",
+                    message=(f"counter {stats_cls}.{fname} is not passed in "
+                             f"the {stats_cls}(...) call — it will report "
+                             f"its default forever"),
+                    key=f"unaggregated:{stats_cls}.{fname}"))
+        return out
+
+    @staticmethod
+    def _constructor_call(fn: ast.FunctionDef, cls_name: str,
+                          ) -> Optional[ast.Call]:
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                    and node.func.id == cls_name):
+                return node
+        return None
+
+    # -- stats-exporter-surfacing ----------------------------------------
+    def _check_row_surfacing(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for stats_cls in STATS_PAIR:
+            hit = _find_class(project, stats_cls)
+            if hit is None:
+                continue
+            src, cls = hit
+            fields = {n for n, _, _ in dataclass_fields(cls)}
+            row = next((n for n in cls.body
+                        if isinstance(n, ast.FunctionDef)
+                        and n.name == "row"), None)
+            if row is None:
+                out.append(Finding(
+                    check=SURFACE, path=src.relpath, line=cls.lineno,
+                    symbol=stats_cls,
+                    message=f"{stats_cls} has no row() exporter method",
+                    key="no-row"))
+                continue
+            surfaced, hidden = self._row_coverage(row, fields)
+            for fname, lineno in sorted(hidden.items()):
+                out.append(Finding(
+                    check=SURFACE, path=src.relpath, line=lineno,
+                    symbol=f"{stats_cls}.row",
+                    message=(f"{stats_cls}.{fname} is dropped from row() — "
+                             f"it never reaches the JSON/Prometheus "
+                             f"exporters"),
+                    key=f"unsurfaced:{fname}"))
+            if surfaced is not None:
+                for fname in sorted(fields - surfaced - set(hidden)):
+                    out.append(Finding(
+                        check=SURFACE, path=src.relpath, line=row.lineno,
+                        symbol=f"{stats_cls}.row",
+                        message=(f"{stats_cls}.{fname} is missing from the "
+                                 f"dict row() returns"),
+                        key=f"unsurfaced:{fname}"))
+        return out
+
+    @staticmethod
+    def _row_coverage(row: ast.FunctionDef, fields: Set[str],
+                      ) -> Tuple[Optional[Set[str]], Dict[str, int]]:
+        """(surfaced keys or None for __dict__-based "all", hidden
+        field -> pop lineno)."""
+        hidden: Dict[str, int] = {}
+        dict_based = False
+        literal_keys: Optional[Set[str]] = None
+        for node in ast.walk(row):
+            if (isinstance(node, ast.Attribute)
+                    and node.attr == "__dict__"):
+                dict_based = True
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "pop" and node.args):
+                key = const_str(node.args[0])
+                if key is not None and key in fields:
+                    hidden[key] = node.lineno
+            if isinstance(node, ast.Return) and isinstance(node.value,
+                                                           ast.Dict):
+                literal_keys = {const_str(k) for k in node.value.keys
+                                if k is not None and const_str(k)}
+        if dict_based:
+            return None, hidden
+        return literal_keys or set(), hidden
+
+    # -- tracer-kind-registry --------------------------------------------
+    def _check_kinds(self, project: Project) -> List[Finding]:
+        registry = self._registry(project, "EVENT_KINDS")
+        if registry is None:
+            return []
+        reg_src, reg_line, kinds = registry
+        out: List[Finding] = []
+        emitted: Dict[str, Tuple[str, int]] = {}
+        for src in project.files:
+            for node in ast.walk(src.tree):
+                kind = self._emit_kind(node)
+                if kind is None:
+                    continue
+                emitted.setdefault(kind, (src.relpath, node.lineno))
+                if kind not in kinds:
+                    out.append(Finding(
+                        check=KINDS, path=src.relpath, line=node.lineno,
+                        symbol=src.symbol_at(node.lineno),
+                        message=(f"event kind '{kind}' is emitted but not "
+                                 f"declared in EVENT_KINDS — it bypasses "
+                                 f"the conservation accounting"),
+                        key=f"unregistered:{kind}"))
+        for kind in kinds:
+            if kind not in emitted:
+                out.append(Finding(
+                    check=KINDS, path=reg_src.relpath, line=reg_line,
+                    symbol="<module>",
+                    message=(f"EVENT_KINDS declares '{kind}' but no emit "
+                             f"site produces it — dead registry entry"),
+                    key=f"unemitted:{kind}"))
+        terminal = self._registry(project, "TERMINAL_KINDS")
+        if terminal is not None:
+            t_src, t_line, t_kinds = terminal
+            for kind in t_kinds:
+                if kind not in kinds:
+                    out.append(Finding(
+                        check=KINDS, path=t_src.relpath, line=t_line,
+                        symbol="<module>",
+                        message=(f"TERMINAL_KINDS member '{kind}' is not in "
+                                 f"EVENT_KINDS"),
+                        key=f"terminal-unregistered:{kind}"))
+        return out
+
+    @staticmethod
+    def _registry(project: Project, const: str,
+                  ) -> Optional[Tuple[SourceFile, int, Tuple[str, ...]]]:
+        for src in project.files:
+            for node in src.tree.body:
+                if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and node.targets[0].id == const):
+                    kinds = str_tuple(node.value)
+                    if kinds is not None:
+                        return src, node.lineno, kinds
+        return None
+
+    @staticmethod
+    def _emit_kind(node: ast.AST) -> Optional[str]:
+        """Constant kind of a ``<anything>.emit(t, replica, rid, kind, …)``
+        call, else None."""
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "emit" and len(node.args) >= 4):
+            return None
+        return const_str(node.args[3])

@@ -1,0 +1,242 @@
+"""Checker (3): determinism hazards in the serving layer.
+
+The whole test strategy (vec-vs-ref bit-identity, golden stats rows,
+tracer=None non-perturbation) assumes a run is a pure function of
+``(trace, seed, knobs)``.  Anything that lets iteration order, object
+identity, process state, or the wall clock leak into a scheduling decision
+breaks that silently — usually only under a different hash seed or Python
+version, i.e. in someone else's CI.  Scoped to paths containing a
+``serving`` component.
+
+* ``set-iteration-order`` — ``for``/comprehension iteration over a set
+  literal, set comprehension, or direct ``set()``/``frozenset()`` call.
+  Membership tests and ``sorted(set(...))`` are fine; bare iteration order
+  is hash-seed-dependent.
+* ``id-identity`` — any ``id()`` call: object identity as a sort key or
+  tie-break differs run to run.
+* ``unseeded-rng`` — module-level ``np.random.*`` / ``random.*`` draws and
+  ``default_rng()`` without a seed; all randomness must flow from an
+  explicit seed threaded through the config.
+* ``wall-clock`` — ``time.time``/``monotonic``/``perf_counter`` and
+  ``datetime.now``-family reads; simulation time is ``engine.t``, never the
+  host clock.
+* ``eager-knob-validation`` — a class with a knob field whose legal values
+  live in a module-level registry tuple (``order``/``ORDERINGS``,
+  ``reserve``/``RESERVES``, ...) must validate membership in
+  ``__init__``/``__post_init__`` instead of failing deep in dispatch (or
+  silently falling through, as ``Policy.reserve`` once did).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.reprolint.core import Checker, Finding, Project, SourceFile
+
+SET_ITER = "set-iteration-order"
+ID_IDENTITY = "id-identity"
+UNSEEDED = "unseeded-rng"
+WALL_CLOCK = "wall-clock"
+EAGER = "eager-knob-validation"
+
+# knob field name -> module-level registry constant of its legal values
+KNOB_REGISTRIES = {
+    "order": "ORDERINGS",
+    "reserve": "RESERVES",
+    "preempt_mode": "PREEMPT_MODES",
+    "chunk_order": "CHUNK_ORDERS",
+    "router": "ROUTERS",
+    "steal": "STEAL_MODES",
+}
+
+# module-level RNG draws on numpy's global state
+_NP_GLOBAL_RNG = {
+    "rand", "randn", "randint", "random", "random_sample", "choice",
+    "shuffle", "permutation", "normal", "uniform", "exponential", "poisson",
+    "beta", "gamma", "seed",
+}
+_PY_RANDOM = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "seed",
+}
+_WALL_CLOCK_CHAINS = {
+    ("time", "time"), ("time", "time_ns"), ("time", "monotonic"),
+    ("time", "monotonic_ns"), ("time", "perf_counter"),
+    ("time", "perf_counter_ns"),
+    ("datetime", "now"), ("datetime", "utcnow"), ("datetime", "today"),
+    ("datetime", "datetime", "now"), ("datetime", "datetime", "utcnow"),
+    ("datetime", "datetime", "today"), ("datetime", "date", "today"),
+}
+
+
+def _chain(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _is_setish(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in ("set", "frozenset")
+    return False
+
+
+class DeterminismChecker(Checker):
+    name = "determinism"
+    checks = (SET_ITER, ID_IDENTITY, UNSEEDED, WALL_CLOCK, EAGER)
+    description = ("no set-order, object-identity, global-RNG, or "
+                   "wall-clock dependence in scheduling decisions")
+
+    # paths must contain this component to be in scope (the serving layer
+    # is where nondeterminism corrupts the science; kernels/training have
+    # their own seeding conventions)
+    scope_component = "serving"
+
+    def in_scope(self, src: SourceFile) -> bool:
+        return self.scope_component in src.relpath.split("/")
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for src in project.files:
+            if not self.in_scope(src):
+                continue
+            findings.extend(self._check_hazards(src))
+            findings.extend(self._check_eager_validation(src))
+        return findings
+
+    # -- syntactic hazards ------------------------------------------------
+    def _check_hazards(self, src: SourceFile) -> List[Finding]:
+        out: List[Finding] = []
+
+        def add(check: str, node: ast.AST, message: str, key: str):
+            out.append(Finding(
+                check=check, path=src.relpath, line=node.lineno,
+                symbol=src.symbol_at(node.lineno), message=message, key=key))
+
+        for node in ast.walk(src.tree):
+            iters: List[ast.AST] = []
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters.extend(g.iter for g in node.generators)
+            for it in iters:
+                if _is_setish(it):
+                    add(SET_ITER, it,
+                        "iteration over an unordered set — order is "
+                        "hash-seed-dependent; sort it (or iterate the "
+                        "ordered source)", "set-iteration")
+
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Name) and node.func.id == "id" \
+                    and len(node.args) == 1:
+                add(ID_IDENTITY, node,
+                    "id() leaks object identity into the computation — "
+                    "identity differs run to run; key on a stable field "
+                    "(rid, seq counter)", "id-call")
+            chain = _chain(node.func)
+            if chain is None:
+                continue
+            if (len(chain) == 3 and chain[0] in ("np", "numpy")
+                    and chain[1] == "random"
+                    and chain[2] in _NP_GLOBAL_RNG):
+                add(UNSEEDED, node,
+                    f"np.random.{chain[2]} draws from the global RNG — "
+                    f"use a seeded np.random.default_rng(seed)",
+                    f"np-global:{chain[2]}")
+            if chain[-1] == "default_rng" and not node.args \
+                    and not node.keywords:
+                add(UNSEEDED, node,
+                    "default_rng() without a seed — thread the config seed "
+                    "through", "default-rng-unseeded")
+            if len(chain) == 2 and chain[0] == "random" \
+                    and chain[1] in _PY_RANDOM:
+                add(UNSEEDED, node,
+                    f"random.{chain[1]} draws from the process-global RNG — "
+                    f"use a seeded generator", f"py-global:{chain[1]}")
+            if chain in _WALL_CLOCK_CHAINS:
+                add(WALL_CLOCK, node,
+                    f"wall-clock read {'.'.join(chain)}() — simulation time "
+                    f"is engine.t; host time makes runs irreproducible",
+                    f"clock:{'.'.join(chain)}")
+        return out
+
+    # -- eager-knob-validation -------------------------------------------
+    def _check_eager_validation(self, src: SourceFile) -> List[Finding]:
+        module_consts = {
+            t.id for n in src.tree.body if isinstance(n, ast.Assign)
+            for t in n.targets if isinstance(t, ast.Name)
+        }
+        out: List[Finding] = []
+        for cls in [n for n in ast.walk(src.tree)
+                    if isinstance(n, ast.ClassDef)]:
+            if cls.name.endswith("Stats"):
+                # stats records echo knobs for provenance (router, policy);
+                # the validating owner is the class that *consumes* the knob
+                continue
+            knobs = self._class_knobs(cls)
+            if not knobs:
+                continue
+            validated = self._validated_registries(cls)
+            for fname, lineno in sorted(knobs.items(), key=lambda kv: kv[1]):
+                registry = KNOB_REGISTRIES[fname]
+                if registry not in module_consts:
+                    continue       # values live elsewhere; out of scope
+                if registry in validated:
+                    continue
+                out.append(Finding(
+                    check=EAGER, path=src.relpath, line=lineno,
+                    symbol=cls.name,
+                    message=(f"{cls.name}.{fname} is never validated "
+                             f"against {registry} in __init__/"
+                             f"__post_init__ — an unknown value fails deep "
+                             f"in dispatch (or silently misbehaves)"),
+                    key=f"unvalidated:{fname}"))
+        return out
+
+    @staticmethod
+    def _class_knobs(cls: ast.ClassDef) -> Dict[str, int]:
+        """Knob fields of the class: annotated dataclass fields and
+        __init__ parameters whose name appears in KNOB_REGISTRIES."""
+        knobs: Dict[str, int] = {}
+        for stmt in cls.body:
+            if isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name) \
+                    and stmt.target.id in KNOB_REGISTRIES:
+                knobs[stmt.target.id] = stmt.lineno
+        init = next((n for n in cls.body if isinstance(n, ast.FunctionDef)
+                     and n.name == "__init__"), None)
+        if init is not None:
+            for arg in init.args.args + init.args.kwonlyargs:
+                if arg.arg in KNOB_REGISTRIES and arg.arg not in knobs:
+                    knobs[arg.arg] = arg.lineno
+        return knobs
+
+    @staticmethod
+    def _validated_registries(cls: ast.ClassDef) -> Set[str]:
+        """Registry constants membership-tested inside __init__ or
+        __post_init__."""
+        validated: Set[str] = set()
+        for meth in cls.body:
+            if not (isinstance(meth, ast.FunctionDef)
+                    and meth.name in ("__init__", "__post_init__")):
+                continue
+            for node in ast.walk(meth):
+                if not isinstance(node, ast.Compare):
+                    continue
+                if not any(isinstance(op, (ast.In, ast.NotIn))
+                           for op in node.ops):
+                    continue
+                for comp in node.comparators:
+                    if isinstance(comp, ast.Name):
+                        validated.add(comp.id)
+        return validated

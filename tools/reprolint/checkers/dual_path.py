@@ -1,0 +1,286 @@
+"""Checker (1): dual-path knob parity — the #1 historical bug source.
+
+``SimEngine`` maintains two implementations of the same decode semantics:
+the per-slot reference loop (``_decode_tick_ref`` / ``_decode_tick_budget``)
+and the vectorized/event-leap machinery (``_decode_tick_vec`` /
+``ticks_to_event`` / ``leap``), which must stay bit-exact.  Every PR that
+adds a ``Policy``/``ReplicaSpec`` knob must thread it through BOTH; the
+unthreaded-knob class of bug (a knob consulted on one path only) is exactly
+what broke ``fit_page_size`` stealing and the early chunked-prefill
+feasibility logic.
+
+The checker compares the *knob-read sets* of the two paths in any class
+that defines at least one root method of each side:
+
+* group "tick" — the sibling plain-decode implementations
+  ``_decode_tick_ref`` vs ``_decode_tick_vec``, own bodies only: these are
+  two spellings of one tick and must consult identical knobs;
+* group "path" — the whole reference side vs the whole vectorized/leap
+  side, each taken with its *exclusive* call closure (helpers also
+  reachable from common code like ``_admit``/``step`` are shared semantics
+  and excluded, as are the other side's roots — the vec tick's fallback
+  into the reference tick doesn't grant it the reference reads).
+
+A "knob read" is an attribute read rooted at ``self.policy`` / ``self.spec``
+(or a local alias of either), plus reads of *derived knobs*: ``self._x``
+attributes assigned in ``__init__``/``reset`` from a pure expression over
+policy/spec fields (``self._budget = spec.step_token_budget`` makes a
+``self._budget`` read count as reading ``spec.step_token_budget``).
+
+A knob read on one side and never on the other is a finding listing every
+read site; suppressing any one site (``# reprolint:
+disable=dual-path-knob-parity -- why``) acknowledges the asymmetry.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.reprolint.core import Checker, Finding, Project, SourceFile
+
+CHECK = "dual-path-knob-parity"
+
+KNOB_ROOTS = ("policy", "spec")
+
+# calls considered pure enough for derived-knob extraction; anything else
+# (constructors, methods) makes the assignment opaque and it is skipped
+_PURE_CALLS = {"int", "float", "bool", "abs", "min", "max", "tuple", "list",
+               "round"}
+
+
+@dataclass(frozen=True)
+class PathGroup:
+    group: str
+    side_a: str
+    roots_a: Tuple[str, ...]
+    side_b: str
+    roots_b: Tuple[str, ...]
+    closure: bool     # include each side's *exclusive* call closure
+
+
+GROUPS = (
+    PathGroup("tick", "reference tick", ("_decode_tick_ref",),
+              "vectorized tick", ("_decode_tick_vec",), closure=False),
+    PathGroup("path", "reference path",
+              ("_decode_tick_ref", "_decode_tick_budget"),
+              "vectorized/leap path",
+              ("_decode_tick_vec", "ticks_to_event", "leap",
+               "_budget_constrained"),
+              closure=True),
+)
+
+# (method, lineno) read sites per knob
+KnobSites = Dict[str, List[Tuple[str, int]]]
+
+
+def _method_map(cls: ast.ClassDef) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _knob_refs_in_expr(expr: ast.AST, derived: Dict[str, Set[str]],
+                       ) -> Optional[Set[str]]:
+    """Knobs referenced by a pure expression; None if the expression is
+    opaque (calls anything beyond builtin coercions)."""
+    knobs: Set[str] = set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            if not (isinstance(node.func, ast.Name)
+                    and node.func.id in _PURE_CALLS):
+                return None
+        if isinstance(node, ast.Attribute):
+            base = node.value
+            # self.policy.F / self.spec.F
+            if (isinstance(base, ast.Attribute)
+                    and isinstance(base.value, ast.Name)
+                    and base.value.id == "self"
+                    and base.attr in KNOB_ROOTS):
+                knobs.add(f"{base.attr}.{node.attr}")
+            # policy.F / spec.F (ctor params)
+            elif isinstance(base, ast.Name) and base.id in KNOB_ROOTS:
+                knobs.add(f"{base.id}.{node.attr}")
+            # self._derived
+            elif (isinstance(base, ast.Name) and base.id == "self"
+                    and node.attr in derived):
+                knobs |= derived[node.attr]
+    return knobs
+
+
+def _derived_knobs(methods: Dict[str, ast.FunctionDef]) -> Dict[str, Set[str]]:
+    """``self.<name> -> {knob, ...}`` for attributes assigned in
+    ``__init__``/``reset`` from pure expressions over policy/spec fields."""
+    derived: Dict[str, Set[str]] = {}
+    bodies = [methods[m] for m in ("__init__", "reset") if m in methods]
+    for _ in range(2):   # second pass resolves derived-of-derived
+        for fn in bodies:
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1):
+                    continue
+                tgt = node.targets[0]
+                if not (isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"):
+                    continue
+                knobs = _knob_refs_in_expr(node.value, derived)
+                if knobs:
+                    derived.setdefault(tgt.attr, set()).update(knobs)
+    return derived
+
+
+def _local_aliases(fn: ast.FunctionDef) -> Dict[str, str]:
+    """Locals assigned directly from ``self.policy``/``self.spec``."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Attribute)
+                and isinstance(node.value.value, ast.Name)
+                and node.value.value.id == "self"
+                and node.value.attr in KNOB_ROOTS):
+            aliases[node.targets[0].id] = node.value.attr
+    return aliases
+
+
+def _knob_reads(fn: ast.FunctionDef, derived: Dict[str, Set[str]],
+                ) -> List[Tuple[str, int]]:
+    """Every (knob, lineno) read inside ``fn`` (Store/Del contexts are
+    writes, not reads)."""
+    aliases = _local_aliases(fn)
+    reads: List[Tuple[str, int]] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Attribute):
+            continue
+        if isinstance(node.ctx, (ast.Store, ast.Del)):
+            continue
+        base = node.value
+        if (isinstance(base, ast.Attribute)
+                and isinstance(base.value, ast.Name)
+                and base.value.id == "self" and base.attr in KNOB_ROOTS):
+            reads.append((f"{base.attr}.{node.attr}", node.lineno))
+        elif isinstance(base, ast.Name) and base.id in aliases:
+            reads.append((f"{aliases[base.id]}.{node.attr}", node.lineno))
+        elif (isinstance(base, ast.Name) and base.id == "self"
+                and node.attr in derived):
+            for knob in sorted(derived[node.attr]):
+                reads.append((knob, node.lineno))
+    return reads
+
+
+def _call_graph(methods: Dict[str, ast.FunctionDef]) -> Dict[str, Set[str]]:
+    graph: Dict[str, Set[str]] = {}
+    for name, fn in methods.items():
+        callees: Set[str] = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "self"
+                    and node.func.attr in methods):
+                callees.add(node.func.attr)
+        graph[name] = callees
+    return graph
+
+
+def _reach(graph: Dict[str, Set[str]], roots: Tuple[str, ...],
+           stop: Set[str]) -> Set[str]:
+    seen: Set[str] = set()
+    frontier = [r for r in roots if r in graph]
+    while frontier:
+        m = frontier.pop()
+        if m in seen:
+            continue
+        seen.add(m)
+        for callee in graph.get(m, ()):
+            if callee not in stop and callee not in seen:
+                frontier.append(callee)
+    return seen
+
+
+def _side_methods(group: PathGroup, side_roots: Tuple[str, ...],
+                  other_roots: Tuple[str, ...],
+                  methods: Dict[str, ast.FunctionDef]) -> Set[str]:
+    present = tuple(r for r in side_roots if r in methods)
+    if not group.closure:
+        return set(present)
+    graph = _call_graph(methods)
+    all_roots = set(group.roots_a) | set(group.roots_b)
+    reach_side = _reach(graph, present, stop=set(other_roots))
+    # common code: anything reachable from a method that belongs to neither
+    # side — its knob reads are shared semantics, not path-specific ones
+    reach_a = _reach(graph, group.roots_a, stop=set(group.roots_b))
+    reach_b = _reach(graph, group.roots_b, stop=set(group.roots_a))
+    common_starts = tuple(m for m in methods
+                          if m not in (reach_a | reach_b | all_roots))
+    reach_common = _reach(graph, common_starts, stop=all_roots)
+    return (reach_side | set(present)) - reach_common
+
+
+def _collect_side(group: PathGroup, side_roots: Tuple[str, ...],
+                  other_roots: Tuple[str, ...],
+                  methods: Dict[str, ast.FunctionDef],
+                  derived: Dict[str, Set[str]]) -> KnobSites:
+    sites: KnobSites = {}
+    for name in sorted(_side_methods(group, side_roots, other_roots,
+                                     methods)):
+        for knob, line in _knob_reads(methods[name], derived):
+            sites.setdefault(knob, []).append((name, line))
+    return sites
+
+
+class DualPathChecker(Checker):
+    name = "dual-path"
+    checks = (CHECK,)
+    description = ("Policy/ReplicaSpec knobs must be read on both the "
+                   "reference and the vectorized/event-leap decode path")
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for src in project.files:
+            for cls in [n for n in ast.walk(src.tree)
+                        if isinstance(n, ast.ClassDef)]:
+                findings.extend(self._check_class(src, cls))
+        return findings
+
+    def _check_class(self, src: SourceFile, cls: ast.ClassDef,
+                     ) -> List[Finding]:
+        methods = _method_map(cls)
+        findings: List[Finding] = []
+        derived = _derived_knobs(methods)
+        for group in GROUPS:
+            if not (set(group.roots_a) & set(methods)
+                    and set(group.roots_b) & set(methods)):
+                continue
+            sites_a = _collect_side(group, group.roots_a, group.roots_b,
+                                    methods, derived)
+            sites_b = _collect_side(group, group.roots_b, group.roots_a,
+                                    methods, derived)
+            for knob in sorted(set(sites_a) - set(sites_b)):
+                findings.append(self._finding(src, cls, group, knob,
+                                              sites_a[knob], group.side_a,
+                                              group.side_b))
+            for knob in sorted(set(sites_b) - set(sites_a)):
+                findings.append(self._finding(src, cls, group, knob,
+                                              sites_b[knob], group.side_b,
+                                              group.side_a))
+        return findings
+
+    @staticmethod
+    def _finding(src: SourceFile, cls: ast.ClassDef, group: PathGroup,
+                 knob: str, sites: List[Tuple[str, int]], read_side: str,
+                 missing_side: str) -> Finding:
+        where = ", ".join(f"{m}:{ln}" for m, ln in sites)
+        lines = tuple(ln for _, ln in sites)
+        return Finding(
+            check=CHECK,
+            path=src.relpath,
+            line=lines[0],
+            symbol=f"{cls.name}.{sites[0][0]}",
+            message=(f"knob `{knob}` is read on the {read_side} ({where}) "
+                     f"but never on the {missing_side} — thread it through "
+                     f"both or suppress one read site with a justification"),
+            key=f"{group.group}:{knob}:unread-on:{missing_side}",
+            extra_lines=lines[1:],
+        )

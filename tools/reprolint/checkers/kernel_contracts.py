@@ -1,0 +1,240 @@
+"""Checker (4): Pallas kernel contracts.
+
+Every kernel in ``kernels/`` ships as a triple — ``<base>_pallas`` (the
+kernel), ``ref.<base>_ref`` (the pure-jnp oracle), and an ``ops.<base>``
+wrapper dispatching ``pallas``/``interpret``/``xla`` — plus an
+interpret-vs-xla test sweep.  CPU CI only ever runs the interpret and xla
+legs, so a kernel missing any leg silently loses its correctness coverage.
+
+* ``kernel-ref-parity`` — each ``<base>_pallas`` needs ``<base>_ref`` in
+  ``ref.py`` and an ``ops.py`` wrapper ``<base>`` referencing both.
+* ``kernel-test-parity`` — some test module must reference the op together
+  with the ``interpret`` impl (the cross-backend equivalence sweep).
+* ``kernel-grid-guard`` — a ``pallas_call`` grid computed with a plain
+  floor division over a dimension, in a function with no ``%`` padding or
+  divisibility assert, silently drops the remainder block (severity
+  *warning*: it's a heuristic).
+* ``kernel-index-map-arity`` — BlockSpec index_map lambdas must take
+  exactly ``len(grid)`` arguments (plus one per scalar-prefetch operand
+  when a ``PrefetchScalarGridSpec`` carries ``num_scalar_prefetch``).
+
+The kernels package is located structurally: any scanned directory named
+``kernels`` containing both ``ops.py`` and ``ref.py``.  Tests are resolved
+from ``<repo root>/tests`` (parsed on demand, never linted themselves).
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.reprolint.core import Checker, Finding, Project, SourceFile
+
+REF_PARITY = "kernel-ref-parity"
+TEST_PARITY = "kernel-test-parity"
+GRID_GUARD = "kernel-grid-guard"
+INDEX_ARITY = "kernel-index-map-arity"
+
+_SKIP_MODULES = {"__init__.py", "ops.py", "ref.py"}
+
+
+def _kernels_dirs(project: Project) -> List[str]:
+    """Relative dirs named ``kernels`` holding both ops.py and ref.py."""
+    dirs: Dict[str, Set[str]] = {}
+    for src in project.files:
+        rel = Path(src.relpath)
+        if rel.parent.name == "kernels":
+            dirs.setdefault(rel.parent.as_posix(), set()).add(rel.name)
+    return [d for d, names in sorted(dirs.items())
+            if {"ops.py", "ref.py"} <= names]
+
+
+def _top_functions(src: SourceFile) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in src.tree.body
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _names_referenced(fn: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+    return out
+
+
+class KernelContractChecker(Checker):
+    name = "kernel-contracts"
+    checks = (REF_PARITY, TEST_PARITY, GRID_GUARD, INDEX_ARITY)
+    description = ("every Pallas kernel needs a ref.py twin, an ops.py "
+                   "wrapper, an interpret-vs-xla test, and guarded block "
+                   "arithmetic")
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for kdir in _kernels_dirs(project):
+            findings.extend(self._check_package(project, kdir))
+        return findings
+
+    def _check_package(self, project: Project, kdir: str) -> List[Finding]:
+        out: List[Finding] = []
+        ops = project.file(f"{kdir}/ops.py")
+        ref = project.file(f"{kdir}/ref.py")
+        kernel_files = [f for f in project.files
+                        if Path(f.relpath).parent.as_posix() == kdir
+                        and Path(f.relpath).name not in _SKIP_MODULES]
+        ref_fns = set(_top_functions(ref)) if ref else set()
+        ops_fns = _top_functions(ops) if ops else {}
+        tests = project.extra_files("tests")
+
+        for src in kernel_files:
+            for name, fn in sorted(_top_functions(src).items()):
+                if not name.endswith("_pallas") or name.startswith("_"):
+                    continue
+                base = name[:-len("_pallas")]
+                out.extend(self._check_triple(src, fn, base, name, ref,
+                                              ref_fns, ops, ops_fns))
+                out.extend(self._check_test(src, fn, base, tests))
+            out.extend(self._check_pallas_calls(src))
+        return out
+
+    # -- kernel-ref-parity ------------------------------------------------
+    def _check_triple(self, src: SourceFile, fn: ast.FunctionDef, base: str,
+                      pallas_name: str, ref: Optional[SourceFile],
+                      ref_fns: Set[str], ops: Optional[SourceFile],
+                      ops_fns: Dict[str, ast.FunctionDef]) -> List[Finding]:
+        out: List[Finding] = []
+
+        def add(message: str, key: str):
+            out.append(Finding(
+                check=REF_PARITY, path=src.relpath, line=fn.lineno,
+                symbol=pallas_name, message=message, key=key))
+
+        if f"{base}_ref" not in ref_fns:
+            add(f"kernel {pallas_name} has no {base}_ref oracle in ref.py — "
+                f"the xla leg of the impl dispatch has nothing to run",
+                f"no-ref:{base}")
+        wrapper = ops_fns.get(base)
+        if wrapper is None:
+            add(f"kernel {pallas_name} has no ops.py wrapper `{base}` — "
+                f"callers can't dispatch pallas/interpret/xla", f"no-op:{base}")
+        else:
+            referenced = _names_referenced(wrapper)
+            if pallas_name not in referenced:
+                add(f"ops.{base} never calls {pallas_name} — the pallas/"
+                    f"interpret legs are unwired", f"op-no-pallas:{base}")
+            if f"{base}_ref" not in referenced:
+                add(f"ops.{base} never calls {base}_ref — the xla leg is "
+                    f"unwired", f"op-no-ref:{base}")
+        return out
+
+    # -- kernel-test-parity -----------------------------------------------
+    def _check_test(self, src: SourceFile, fn: ast.FunctionDef, base: str,
+                    tests: List[SourceFile]) -> List[Finding]:
+        for tsrc in tests:
+            names = _names_referenced(tsrc.tree)
+            strings = {n.value for n in ast.walk(tsrc.tree)
+                       if isinstance(n, ast.Constant)
+                       and isinstance(n.value, str)}
+            mentions_op = base in names or f"{base}_pallas" in names
+            mentions_interpret = ("interpret" in strings
+                                  or "interpret" in names)
+            if mentions_op and mentions_interpret:
+                return []
+        return [Finding(
+            check=TEST_PARITY, path=src.relpath, line=fn.lineno,
+            symbol=f"{base}_pallas",
+            message=(f"no test references `{base}` together with the "
+                     f"'interpret' impl — the interpret-vs-xla equivalence "
+                     f"sweep doesn't cover this kernel"),
+            key=f"untested:{base}")]
+
+    # -- grid guards and index-map arity ----------------------------------
+    def _check_pallas_calls(self, src: SourceFile) -> List[Finding]:
+        out: List[Finding] = []
+        for fn in [n for n in ast.walk(src.tree)
+                   if isinstance(n, ast.FunctionDef)]:
+            calls = [n for n in ast.walk(fn) if isinstance(n, ast.Call)
+                     and self._callee_name(n) in ("pallas_call",
+                                                  "PrefetchScalarGridSpec")]
+            if not calls:
+                continue
+            grid, prefetch = self._grid_of(fn)
+            has_mod = any(isinstance(n, ast.BinOp)
+                          and isinstance(n.op, ast.Mod)
+                          for n in ast.walk(fn))
+            if grid is not None and not has_mod:
+                for elt in grid.elts:
+                    if self._is_bare_floordiv(elt, fn):
+                        out.append(Finding(
+                            check=GRID_GUARD, path=src.relpath,
+                            line=elt.lineno, symbol=fn.name,
+                            message=("grid dimension computed by floor "
+                                     "division with no % padding or "
+                                     "divisibility assert in scope — the "
+                                     "remainder block is silently dropped"),
+                            key="unguarded-floordiv",
+                            severity="warning"))
+            if grid is not None:
+                expected = len(grid.elts) + prefetch
+                for lam in [n for n in ast.walk(fn)
+                            if isinstance(n, ast.Lambda)]:
+                    arity = len(lam.args.args)
+                    if arity != expected:
+                        out.append(Finding(
+                            check=INDEX_ARITY, path=src.relpath,
+                            line=lam.lineno, symbol=fn.name,
+                            message=(f"index_map lambda takes {arity} "
+                                     f"args but the grid has "
+                                     f"{len(grid.elts)} dims"
+                                     + (f" + {prefetch} scalar-prefetch "
+                                        f"operand(s)" if prefetch else "")
+                                     + " — block indexing is misaligned"),
+                            key=f"arity:{arity}-vs-{expected}"))
+        return out
+
+    @staticmethod
+    def _callee_name(call: ast.Call) -> Optional[str]:
+        if isinstance(call.func, ast.Name):
+            return call.func.id
+        if isinstance(call.func, ast.Attribute):
+            return call.func.attr
+        return None
+
+    def _grid_of(self, fn: ast.FunctionDef) -> Tuple[Optional[ast.Tuple],
+                                                     int]:
+        """The literal ``grid=`` tuple used by this function's pallas_call
+        (directly or via a PrefetchScalarGridSpec) and the scalar-prefetch
+        count."""
+        grid: Optional[ast.Tuple] = None
+        prefetch = 0
+        for call in [n for n in ast.walk(fn) if isinstance(n, ast.Call)]:
+            name = self._callee_name(call)
+            if name not in ("pallas_call", "PrefetchScalarGridSpec"):
+                continue
+            for kw in call.keywords:
+                if kw.arg == "grid" and isinstance(kw.value, ast.Tuple):
+                    grid = kw.value
+                if kw.arg == "num_scalar_prefetch" \
+                        and isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, int):
+                    prefetch = kw.value.value
+        return grid, prefetch
+
+    def _is_bare_floordiv(self, elt: ast.AST, fn: ast.FunctionDef) -> bool:
+        """True when the grid element is (or is assigned from) a plain
+        ``a // b`` floor division."""
+        if isinstance(elt, ast.BinOp) and isinstance(elt.op, ast.FloorDiv):
+            return True
+        if isinstance(elt, ast.Name):
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and node.targets[0].id == elt.id
+                        and isinstance(node.value, ast.BinOp)
+                        and isinstance(node.value.op, ast.FloorDiv)):
+                    return True
+        return False

@@ -1,0 +1,319 @@
+"""reprolint core: source model, findings, suppressions, and the run loop.
+
+Pieces
+------
+* :class:`Finding` — one checker hit, carrying a *stable key* (no line
+  numbers) so the committed baseline survives unrelated edits.
+* :class:`SourceFile` — a parsed module: AST, symbol table (qualnames with
+  line ranges), and the suppression index built from ``# reprolint:``
+  comments (tokenize-based, so strings containing the marker don't count).
+* :class:`Project` — the set of files under analysis plus the repo root;
+  checkers that need cross-file context (kind registry vs. emit sites,
+  kernels vs. their tests) resolve it here.
+* :func:`run_checkers` — run every checker, apply suppressions, and return
+  ``(findings, suppressed)``.
+
+Suppression grammar (checker names comma-separated, ``all`` wildcard;
+everything after ``--`` is a human justification)::
+
+    x = risky()               # reprolint: disable=<check> -- why it's fine
+    def f():                  # reprolint: disable=<check> -- whole symbol
+    # reprolint: disable-file=<check>
+
+A comment on a ``def``/``class`` header line (or on a bare comment line
+directly above one) suppresses the check for the whole symbol body; any
+other placement suppresses only its own line.  A finding that carries
+``extra_lines`` (e.g. every read site of an asymmetric knob) is suppressed
+when *any* of its lines is — acknowledging one site acknowledges the knob.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SEVERITIES = ("error", "warning")
+
+_DISABLE_RE = re.compile(
+    r"#\s*reprolint:\s*(?P<kind>disable(?:-file)?)\s*=\s*"
+    r"(?P<checks>[a-z0-9_,\-\s]+?)(?:\s*--.*)?$"
+)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One checker hit.
+
+    ``key`` is the stable identity used for baseline matching — it must not
+    contain line numbers (those drift with every edit); ``(check, path,
+    symbol, key)`` identifies the finding across revisions.
+    """
+
+    check: str
+    path: str                      # repo-root-relative, posix separators
+    line: int
+    symbol: str                    # "Class.method", "Class", or "<module>"
+    message: str
+    key: str
+    severity: str = "error"
+    extra_lines: Tuple[int, ...] = ()   # further sites; any suppresses
+
+    @property
+    def identity(self) -> Tuple[str, str, str, str]:
+        return (self.check, self.path, self.symbol, self.key)
+
+    def to_dict(self) -> dict:
+        return {
+            "check": self.check,
+            "path": self.path,
+            "line": self.line,
+            "symbol": self.symbol,
+            "key": self.key,
+            "message": self.message,
+            "severity": self.severity,
+        }
+
+
+@dataclass
+class _Suppression:
+    checks: Set[str]
+    start: int
+    end: int                       # inclusive line range the disable covers
+
+
+class SourceFile:
+    """One parsed module plus its suppression index."""
+
+    def __init__(self, root: Path, path: Path):
+        self.abspath = path
+        self.relpath = path.relative_to(root).as_posix()
+        self.text = path.read_text()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self.lines = self.text.splitlines()
+        self._symbols = self._index_symbols()
+        self.file_disables: Set[str] = set()
+        self._suppressions: List[_Suppression] = []
+        self._index_suppressions()
+
+    # -- symbols ----------------------------------------------------------
+    def _index_symbols(self) -> List[Tuple[str, int, int]]:
+        out: List[Tuple[str, int, int]] = []
+
+        def walk(node: ast.AST, prefix: str):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef)):
+                    qual = f"{prefix}.{child.name}" if prefix else child.name
+                    out.append((qual, child.lineno, child.end_lineno or
+                                child.lineno))
+                    walk(child, qual)
+                else:
+                    walk(child, prefix)
+
+        walk(self.tree, "")
+        return out
+
+    def symbol_at(self, line: int) -> str:
+        """Innermost enclosing def/class qualname, or ``<module>``."""
+        best = "<module>"
+        best_span = float("inf")
+        for qual, start, end in self._symbols:
+            if start <= line <= end and (end - start) < best_span:
+                best, best_span = qual, end - start
+        return best
+
+    # -- suppressions -----------------------------------------------------
+    def _symbol_header_span(self, line: int) -> Optional[Tuple[int, int]]:
+        """If ``line`` sits on a def/class header (or the bare-comment line
+        directly above one), return that symbol's (start, end)."""
+        for qual, start, end in self._symbols:
+            if line == start:
+                return start, end
+            if line == start - 1:
+                stripped = self.lines[line - 1].strip() \
+                    if line - 1 < len(self.lines) else ""
+                if stripped.startswith("#"):
+                    return start, end
+        return None
+
+    def _index_suppressions(self):
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(self.text).readline)
+            comments = [(t.start[0], t.string) for t in tokens
+                        if t.type == tokenize.COMMENT]
+        except tokenize.TokenError:
+            comments = [(i + 1, ln) for i, ln in enumerate(self.lines)
+                        if "#" in ln]
+        for lineno, comment in comments:
+            m = _DISABLE_RE.search(comment)
+            if not m:
+                continue
+            checks = {c.strip() for c in m.group("checks").split(",")
+                      if c.strip()}
+            if m.group("kind") == "disable-file":
+                self.file_disables |= checks
+                continue
+            span = self._symbol_header_span(lineno)
+            if span is not None:
+                self._suppressions.append(_Suppression(checks, *span))
+            else:
+                self._suppressions.append(_Suppression(checks, lineno, lineno))
+
+    def is_line_suppressed(self, check: str, line: int) -> bool:
+        if {"all", check} & self.file_disables:
+            return True
+        for sup in self._suppressions:
+            if sup.start <= line <= sup.end and {"all", check} & sup.checks:
+                return True
+        return False
+
+    def is_suppressed(self, finding: Finding) -> bool:
+        return any(self.is_line_suppressed(finding.check, line)
+                   for line in (finding.line, *finding.extra_lines))
+
+
+class Project:
+    """The file set under analysis, keyed by repo-relative path."""
+
+    def __init__(self, root: Path, paths: Sequence[Path]):
+        self.root = Path(root).resolve()
+        self.files: List[SourceFile] = []
+        self.errors: List[str] = []
+        seen: Set[Path] = set()
+        for p in self._expand(paths):
+            if p in seen:
+                continue
+            seen.add(p)
+            try:
+                self.files.append(SourceFile(self.root, p))
+            except SyntaxError as exc:   # real parse error: surface, don't die
+                self.errors.append(f"{p}: {exc}")
+        self._by_rel = {f.relpath: f for f in self.files}
+
+    @staticmethod
+    def _expand(paths: Sequence[Path]) -> List[Path]:
+        out: List[Path] = []
+        for p in paths:
+            p = Path(p).resolve()
+            if p.is_dir():
+                out.extend(sorted(
+                    f for f in p.rglob("*.py")
+                    if "__pycache__" not in f.parts
+                    and not any(part.startswith(".") for part in f.parts)))
+            elif p.suffix == ".py":
+                out.append(p)
+        return out
+
+    def file(self, relpath: str) -> Optional[SourceFile]:
+        return self._by_rel.get(relpath)
+
+    def files_named(self, name: str) -> List[SourceFile]:
+        return [f for f in self.files if Path(f.relpath).name == name]
+
+    def extra_files(self, subdir: str) -> List[SourceFile]:
+        """Parse files from ``root/subdir`` on demand (e.g. ``tests/`` for
+        the kernel-test cross-reference) without adding them to the scanned
+        set — findings are never anchored in extra files."""
+        d = self.root / subdir
+        if not d.is_dir():
+            return []
+        out = []
+        for p in sorted(d.rglob("*.py")):
+            if "__pycache__" in p.parts:
+                continue
+            if p.resolve().as_posix() in {f.abspath.as_posix()
+                                          for f in self.files}:
+                out.append(self._by_rel[p.resolve().relative_to(
+                    self.root).as_posix()])
+                continue
+            try:
+                out.append(SourceFile(self.root, p.resolve()))
+            except SyntaxError:
+                continue
+        return out
+
+
+class Checker:
+    """Base class: subclasses set ``name``/``checks`` and implement
+    :meth:`run` returning raw findings (suppressions applied by the
+    caller)."""
+
+    name: str = "base"
+    checks: Tuple[str, ...] = ()
+    description: str = ""
+
+    def run(self, project: Project) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def run_checkers(project: Project, checkers: Iterable[Checker],
+                 only: Optional[Set[str]] = None,
+                 ) -> Tuple[List[Finding], List[Finding]]:
+    """Run checkers over the project; returns ``(active, suppressed)``,
+    both sorted by (path, line, check, key)."""
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    for checker in checkers:
+        for finding in checker.run(project):
+            if only is not None and finding.check not in only:
+                continue
+            src = project.file(finding.path)
+            if src is not None and src.is_suppressed(finding):
+                suppressed.append(finding)
+            else:
+                active.append(finding)
+    order = lambda f: (f.path, f.line, f.check, f.key)  # noqa: E731
+    return sorted(active, key=order), sorted(suppressed, key=order)
+
+
+# -- shared AST helpers used by several checkers ---------------------------
+
+def attr_chain(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``a.b.c`` -> ("a", "b", "c"); None for non-name-rooted chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def str_tuple(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """A tuple/list literal of string constants, else None."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            s = const_str(elt)
+            if s is None:
+                return None
+            out.append(s)
+        return tuple(out)
+    return None
+
+
+def class_defs(src: SourceFile) -> List[ast.ClassDef]:
+    return [n for n in ast.walk(src.tree) if isinstance(n, ast.ClassDef)]
+
+
+def dataclass_fields(cls: ast.ClassDef) -> List[Tuple[str, int, str]]:
+    """(name, lineno, annotation-source) per class-level annotated field."""
+    out = []
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                          ast.Name):
+            ann = ast.unparse(stmt.annotation)
+            out.append((stmt.target.id, stmt.lineno, ann))
+    return out

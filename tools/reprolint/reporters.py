@@ -1,0 +1,77 @@
+"""Human and JSON reporters for reprolint runs.
+
+The human reporter mirrors ``benchmarks/check_regression.py``: one line per
+item, a one-line tally, and ``FAIL`` lines on stderr for whatever gates the
+exit code (here: findings new vs. the baseline).  The JSON report is the CI
+artifact; its schema is pinned by ``tests/test_reprolint.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List, Optional, Sequence, TextIO
+
+from tools.reprolint.core import Finding
+
+JSON_SCHEMA_VERSION = 1
+
+
+def report_human(findings: Sequence[Finding], new: Sequence[Finding],
+                 suppressed: Sequence[Finding], fixed: Sequence[dict],
+                 baseline_path: Optional[str], verbose: bool = False,
+                 out: Optional[TextIO] = None,
+                 err: Optional[TextIO] = None) -> None:
+    # late-bound so stream redirection (pytest capture, CI tee) is honoured
+    out = sys.stdout if out is None else out
+    err = sys.stderr if err is None else err
+    new_ids = {id(f) for f in new}
+    for f in findings:
+        tag = "NEW " if id(f) in new_ids else "base"
+        print(f"{tag}  {f.path}:{f.line}: [{f.check}] {f.message}", file=out)
+    if verbose:
+        for f in suppressed:
+            print(f"supp  {f.path}:{f.line}: [{f.check}] {f.message}",
+                  file=out)
+    for e in fixed:
+        print(f"gone  {e['path']}: [{e['check']}] {e['key']} "
+              f"(baselined but no longer observed — refresh the baseline)",
+              file=out)
+    vs = f" vs baseline {baseline_path}" if baseline_path else " (no baseline)"
+    print(f"{len(findings)} finding(s), {len(suppressed)} suppressed, "
+          f"{len(new)} new{vs}", file=out)
+    for f in new:
+        print(f"FAIL  {f.path}:{f.line}: [{f.check}] {f.message}", file=err)
+
+
+def report_json(findings: Sequence[Finding], new: Sequence[Finding],
+                suppressed: Sequence[Finding], fixed: Sequence[dict],
+                paths: Sequence[str], baseline_path: Optional[str]) -> dict:
+    new_ids = {id(f) for f in new}
+
+    def encode(f: Finding) -> dict:
+        d = f.to_dict()
+        d["new"] = id(f) in new_ids
+        return d
+
+    return {
+        "version": JSON_SCHEMA_VERSION,
+        "tool": "reprolint",
+        "paths": list(paths),
+        "baseline": baseline_path,
+        "counts": {
+            "findings": len(findings),
+            "new": len(new),
+            "suppressed": len(suppressed),
+            "fixed": len(fixed),
+        },
+        "findings": [encode(f) for f in findings],
+        "suppressed": [f.to_dict() for f in suppressed],
+        "fixed": list(fixed),
+    }
+
+
+def write_json(doc: dict, path: str) -> None:
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
